@@ -1,0 +1,74 @@
+"""Generate EXPERIMENTS.md sections from the dry-run/perf artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import (load_cells, markdown_table,  # noqa: E402
+                                 roofline_row)
+
+
+def dryrun_summary(mesh):
+    rows = []
+    for rec in load_cells("experiments/dryrun", mesh):
+        ha = rec.get("hlo_analysis", {})
+        coll = ha.get("collectives", {})
+        coll_s = ", ".join(f"{k.split('-')[0] if False else k}: "
+                           f"{v['bytes']/2**20:.0f} MiB×{v['count']:.0f}"
+                           for k, v in coll.items() if v["count"])
+        mem = rec.get("memory", {})
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['status']} "
+            f"| {rec.get('compile_s', '—')} "
+            f"| {mem.get('argument_size_in_bytes', 0)/2**30:.2f} "
+            f"| {mem.get('temp_size_in_bytes', 0)/2**30:.2f} "
+            f"| {ha.get('flops', 0):.2e} | {ha.get('bytes', 0):.2e} "
+            f"| {coll_s or '—'} |")
+    hdr = ("| arch | shape | status | compile s | args GiB/dev "
+           "| temp GiB/dev | HLO FLOPs/dev | HLO bytes/dev "
+           "| collectives (per-device operand traffic) |\n"
+           "|" + "---|" * 9)
+    return hdr + "\n" + "\n".join(rows)
+
+
+def perf_rows(paths):
+    out = []
+    for p in paths:
+        with open(p) as f:
+            rec = json.load(f)
+        r = roofline_row(rec)
+        r["tag"] = os.path.basename(p).replace(".json", "")
+        out.append(r)
+    return out
+
+
+def perf_table(rows):
+    hdr = ("| variant | compute s | compute s (TPU-adj) | memory s "
+           "| collective s | dominant | roofline frac | temp GiB |\n"
+           "|" + "---|" * 8)
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['tag']} | {r['compute_s']:.4g} | {r['compute_adj_s']:.4g} "
+            f"| {r['memory_s']:.4g} | {r['collective_s']:.4g} "
+            f"| {r['dominant']} | {r['roofline_fraction']:.4g} "
+            f"| {r['temp_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "roofline"):
+        rows = [roofline_row(r) for r in load_cells()]
+        print(markdown_table(rows))
+    if which in ("all", "dryrun"):
+        print(dryrun_summary("pod_16x16"))
+    if which == "multipod":
+        print(dryrun_summary("multipod_2x16x16"))
+    if which == "perf":
+        print(perf_table(perf_rows(sorted(p for p in glob.glob(sys.argv[2]) if p.endswith(".json")))))

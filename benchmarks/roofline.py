@@ -1,0 +1,182 @@
+"""Roofline derivation from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod mesh:
+
+    compute term    = per-device HLO FLOPs / peak_FLOP/s
+    memory term     = per-device HLO bytes  / HBM_bw
+    collective term = Σ per-device collective bytes × ring-factor / link_bw
+
+(equivalently HLO_global / (chips × peak) since the SPMD module is the
+per-device program).  Ring factors: all-reduce 2·(k−1)/k ≈ 2, all-gather /
+reduce-scatter / all-to-all (k−1)/k ≈ 1, collective-permute 1.
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (+attention) for serving;
+ratio = MODEL_FLOPS / global HLO FLOPs (useful-compute fraction — catches
+remat recompute, masked-flash waste, and replicated-attention waste).
+
+MoE-cell temp memory is adjusted for the known CPU-lowering artifact
+(hoisted bf16→f32 upcasts of local expert weights = 2× local expert bytes;
+native on TPU) — both raw and adjusted values are reported.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_BYTES = 16 * 2**30
+
+RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def moe_f32_artifact_bytes(arch: str, n_model: int = 16) -> float:
+    """CPU-lowering artifact: f32 copies of local (per-device) expert
+    weights hoisted out of the layer scan."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    if cfg.n_experts == 0:
+        return 0.0
+    moe_layers = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+    local_e = max(cfg.n_experts // n_model, 1)
+    params = moe_layers * local_e * 3 * cfg.d_model * cfg.moe_ff
+    return params * 4.0          # f32 copies of the bf16 weights
+
+
+def ragged_dense_artifact_flops(rec: dict, n_model: int = 16,
+                                n_data: int = 16) -> float:
+    """CPU-lowering artifact in FLOPs: ``lax.ragged_dot`` lowers to a dense
+    batched dot over all E_local experts on CPU (×E_local compute); TPU
+    Mosaic lowers it as a true grouped matmul.  Returns the per-device
+    artifact (dense-counted minus true) to subtract from the compute term."""
+    import numpy as np
+
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    ov = dict(rec.get("cfg_overrides") or {})
+    ov.pop("microbatches", None)
+    if ov:
+        cfg = cfg.replace(**ov)
+    if cfg.n_experts == 0:
+        return 0.0
+    e_loc = max(cfg.n_experts // n_model, 1)
+    spec = SHAPES[rec["shape"]]
+    mb = (rec.get("meta") or {}).get("microbatches", 1)
+    if spec.kind == "train":
+        tokens_dev_mb = spec.global_batch * spec.seq_len / n_data / mb
+        passes = 4.0 if cfg.remat else 3.0      # fwd + remat + bwd(2×)
+    else:
+        c = (rec.get("meta") or {}).get("chunk") or 1
+        tokens_dev_mb = spec.global_batch * (spec.seq_len if spec.kind ==
+                                             "prefill" else c) / n_data
+        mb, passes = 1, 1.0
+    cap = cfg.capacity_factor if cfg.capacity_factor > 0 else float(cfg.top_k)
+    C = int(np.ceil(tokens_dev_mb * cfg.top_k / n_model * max(cap, 1.0)))
+    moe_layers = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+    true_per_layer_mb = 3 * 2.0 * C * cfg.d_model * cfg.moe_ff
+    artifact = true_per_layer_mb * (e_loc - 1) * moe_layers * mb * passes
+    return artifact
+
+
+def load_cells(out_dir: str = "experiments/dryrun",
+               mesh: str = "pod_16x16"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, mesh, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec.get("error", "failed")}
+    ha = rec["hlo_analysis"]
+    n_dev = rec["devices"]
+    compute_t = ha["flops"] / PEAK_FLOPS
+    flops_adj = max(ha["flops"] - ragged_dense_artifact_flops(rec), 0.0)
+    compute_adj_t = flops_adj / PEAK_FLOPS
+    memory_t = ha["bytes"] / HBM_BW
+    coll_bytes = {k: v["bytes"] for k, v in ha["collectives"].items()}
+    coll_t = sum(RING_FACTOR[k] * b for k, b in coll_bytes.items()) / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t,
+             "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound_t = max(terms.values())
+    model_flops = rec.get("model_flops", 0.0)
+    hlo_global = ha["flops"] * n_dev
+    ratio = model_flops / hlo_global if hlo_global else float("nan")
+    # roofline fraction: useful model FLOPs per second achievable vs peak
+    useful_frac = (model_flops / n_dev / PEAK_FLOPS) / bound_t \
+        if bound_t > 0 else float("nan")
+    mem = rec.get("memory", {})
+    temp = mem.get("temp_size_in_bytes", 0)
+    args = mem.get("argument_size_in_bytes", 0)
+    artifact = moe_f32_artifact_bytes(rec["arch"])
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "devices": n_dev,
+        "compute_s": compute_t, "compute_adj_s": compute_adj_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t, "dominant": dominant,
+        "step_time_s": bound_t,
+        "model_flops": model_flops, "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio, "roofline_fraction": useful_frac,
+        "coll_bytes": coll_bytes,
+        "args_gib": args / 2**30, "temp_gib": temp / 2**30,
+        "temp_adj_gib": max(temp - artifact, 0) / 2**30,
+        "fits_hbm": (args + max(temp - artifact, 0)) <= HBM_BYTES,
+    }
+
+
+NOTES = {
+    "compute": "increase arithmetic efficiency: causal/block-causal tile "
+               "skipping, drop remat recompute, avoid replicated attention",
+    "memory": "cut HBM traffic: larger fused tiles, bf16 end-to-end, "
+              "keep weights resident across microbatches",
+    "collective": "reshard to shrink all-gathers / overlap collectives "
+                  "with compute (latency-hiding scheduler)",
+}
+
+
+def markdown_table(rows, title="Roofline (single-pod 16×16, TPU v5e)"):
+    out = [f"### {title}", ""]
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | roofline frac | args GiB/dev | temp GiB/dev "
+           "(adj) | fits |")
+    out.append(hdr)
+    out.append("|" + "---|" * 11)
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAILED "
+                       f"| — | — | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+            f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} | {r['args_gib']:.2f} "
+            f"| {r['temp_gib']:.1f} ({r['temp_adj_gib']:.1f}) "
+            f"| {'✅' if r['fits_hbm'] else '✗'} |")
+    return "\n".join(out)
+
+
+def main(out_dir="experiments/dryrun", mesh="pod_16x16"):
+    rows = [roofline_row(r) for r in load_cells(out_dir, mesh)]
+    print(markdown_table(rows))
+    print()
+    for r in rows:
+        if r.get("status") == "ok":
+            print(f"{r['arch']}__{r['shape']}: dominant={r['dominant']} → "
+                  f"{NOTES[r['dominant']]}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(*sys.argv[1:])

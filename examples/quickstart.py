@@ -1,0 +1,78 @@
+"""Quickstart: train a tiny block-diffusion LM, then decode with Optimus
+streaming chunked decoding and compare token utilization across chunk sizes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.chunked import ChunkedDecodeState
+from repro.core.diffusion import softmax_confidence
+from repro.models import ArchConfig, build_model
+from repro.training import (AdamW, AdamWConfig, DataConfig,
+                            SyntheticTokenStream, make_train_step)
+
+cfg = ArchConfig(name="quickstart", family="dense", n_layers=2, d_model=128,
+                 n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512,
+                 block_size=8, confidence_threshold=0.6)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# --- 1. train briefly on synthetic Markov data (diffusion objective) -------
+data = SyntheticTokenStream(DataConfig(vocab_size=512, seq_len=64,
+                                       global_batch=16))
+opt = AdamW(AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+step = jax.jit(make_train_step(model, opt))
+state = opt.init(params)
+for i in range(60):
+    batch = {"tokens": jnp.asarray(data.batch(i))}
+    params, state, m = step(params, state, batch,
+                            jax.random.fold_in(jax.random.PRNGKey(1), i))
+    if (i + 1) % 20 == 0:
+        print(f"train step {i+1}: loss {float(m['loss']):.3f}")
+
+# --- 2. decode with streaming chunked decoding ------------------------------
+prompt = np.asarray(data.batch(999)[0, :16], np.int64)
+
+
+def decode(chunk: int):
+    cache = model.init_cache(1, 128, dtype=jnp.float32)
+    _, cache = model.prefill(params, jnp.asarray(prompt[None], jnp.int32),
+                             jnp.asarray([len(prompt)], jnp.int32), cache)
+    st = ChunkedDecodeState(prompt_len=len(prompt), max_new_tokens=32,
+                            block_size=cfg.block_size,
+                            threshold=cfg.confidence_threshold,
+                            mask_token=cfg.mask_token_id)
+    while not st.done:
+        toks, start, valid, cai = st.window(chunk)
+        logits, win_kv = model.chunk_forward(
+            params, cache, jnp.asarray(toks[None], jnp.int32),
+            jnp.asarray([start], jnp.int32), jnp.asarray([valid], jnp.int32))
+        conf, tok = softmax_confidence(np.asarray(logits[0]))
+        _, n_adv = st.apply_step(conf, tok, valid, cai)
+        cache = model.freeze(cache, win_kv, jnp.asarray([start], jnp.int32),
+                             jnp.asarray([n_adv], jnp.int32))
+        st.advance(n_adv)
+    return st
+
+
+print("\nchunk | steps | computed | TU")
+outs = {}
+for chunk in (2, 4, 8):
+    st = decode(chunk)
+    outs[chunk] = st.output_tokens
+    print(f"{chunk:5d} | {st.steps:5d} | {st.computed_tokens:8d} "
+          f"| {st.token_utilization:.3f}")
+
+# With a real model, confidences depend on how much suffix the window makes
+# visible, so different chunk sizes may commit slightly different tokens —
+# the paper's finding that chunked decoding preserves accuracy approximately
+# (§7.2), while the *scheduling machinery* is exactly order-preserving
+# (tests/test_chunked_equivalence.py).
+ref = outs[8]
+for c in (2, 4):
+    agree = np.mean([a == b for a, b in zip(outs[c], ref)])
+    print(f"token agreement chunk {c} vs 8: {agree:.0%}")
+print("tokens:", ref[:16], "...")

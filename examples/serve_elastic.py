@@ -1,0 +1,73 @@
+"""End-to-end serving driver: a real model served with batched requests
+through the continuous-batching engine, Optimus elastic decoding vs AR and
+fixed-block baselines (deliverable: serve a small model with batched
+requests).
+
+    PYTHONPATH=src python examples/serve_elastic.py [--requests 12]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import ElasticScheduler, FixedScheduler
+from repro.core.latency_model import CPU_HOST, AnalyticDeviceModel
+from repro.models import ArchConfig, build_model
+from repro.serving import (DATASETS, ModelBackend, PoissonWorkload,
+                           ServingEngine, chunk_distribution)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--requests", type=int, default=10)
+ap.add_argument("--prompt", type=int, default=16)
+ap.add_argument("--out", type=int, default=24)
+args = ap.parse_args()
+
+cfg = ArchConfig(name="serve-demo", family="dense", n_layers=2, d_model=128,
+                 n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512,
+                 block_size=8, confidence_threshold=0.6)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+prof = DATASETS["sharegpt"]
+rng = np.random.default_rng(0)
+
+
+def workload():
+    wl = list(PoissonWorkload(prof, rate=50.0, n_requests=args.requests,
+                              seed=1))
+    for r in wl:
+        r.prompt_len = args.prompt
+        r.max_new_tokens = args.out
+        r.prompt_tokens = rng.integers(4, cfg.vocab_size,
+                                       args.prompt).tolist()
+    return wl
+
+
+def run(mode, chunk=None):
+    be = ModelBackend(model, params, n_slots=8, max_len=128,
+                      decode_mode="ar" if mode == "ar" else "elastic")
+    if mode == "elastic":
+        an = AnalyticDeviceModel(cfg, CPU_HOST)
+        samples = [(b, c, an.step_latency(b, c, 64))
+                   for b in [1, 2, 4, 8] for c in [1, 2, 4, 8]]
+        sch = ElasticScheduler.from_profile(samples, candidates=(2, 4, 8),
+                                            prior_tokens_per_step=3.0)
+    else:
+        sch = FixedScheduler(1 if mode == "ar" else chunk)
+    eng = ServingEngine(be, sch, max_batch=8)
+    rep = eng.run(workload())
+    total_steps = sum(m.decode_steps for m in rep.metrics)
+    print(f"{mode + (str(chunk) if chunk else ''):>10s}: "
+          f"{rep.total_tokens} tokens, {total_steps} request-steps, "
+          f"TU={rep.token_utilization:.3f}, "
+          f"mean chunk={np.mean([c for _, _, c in rep.chunk_history]) if rep.chunk_history else 0:.1f}")
+    return rep
+
+
+print(f"serving {args.requests} batched requests "
+      f"(prompt {args.prompt}, output {args.out}) on a real model\n")
+run("ar")
+run("fixed", 8)
+rep = run("elastic")
+print("\nelastic runtime distributions:", chunk_distribution(rep))
+print("done — all requests completed through the continuous-batching engine")

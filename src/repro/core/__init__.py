@@ -1,0 +1,20 @@
+"""The paper's primary contribution: streaming chunked decoding +
+saturation-aware elastic scheduling for diffusion LLM serving."""
+
+from repro.core.chunked import ChunkedDecodeState
+from repro.core.diffusion import (DecodeTrace, block_decode_reference,
+                                  commit_decisions, softmax_confidence)
+from repro.core.latency_model import (A100_80G, TPU_V5E, AnalyticDeviceModel,
+                                      DeviceSpec,
+                                      PiecewiseAffineLatencyModel)
+from repro.core.scheduler import (DEFAULT_CHUNKS, ElasticScheduler,
+                                  FixedScheduler)
+from repro.core.tu_model import TokenUtilEstimator
+
+__all__ = [
+    "ChunkedDecodeState", "DecodeTrace", "block_decode_reference",
+    "commit_decisions", "softmax_confidence", "AnalyticDeviceModel",
+    "DeviceSpec", "PiecewiseAffineLatencyModel", "TPU_V5E", "A100_80G",
+    "ElasticScheduler", "FixedScheduler", "TokenUtilEstimator",
+    "DEFAULT_CHUNKS",
+]

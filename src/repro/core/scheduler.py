@@ -1,0 +1,80 @@
+"""Saturation-aware elastic scheduling (paper §5).
+
+At every decode iteration the scheduler solves
+
+    c* = argmax_{c ∈ C}  N_commit(c) · b / T_latency(c, b)
+
+combining the offline-profiled piecewise-affine latency model (§5.2) with the
+online token-utilization estimator (§5.3).  A small hysteresis keeps the
+closed loop stable (the paper's "transition between granularities without
+introducing instability").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.latency_model import PiecewiseAffineLatencyModel
+from repro.core.tu_model import TokenUtilEstimator
+
+DEFAULT_CHUNKS = (2, 4, 8, 16, 32)
+
+
+@dataclass
+class ElasticScheduler:
+    latency_model: PiecewiseAffineLatencyModel
+    tu_estimator: TokenUtilEstimator
+    candidates: tuple = DEFAULT_CHUNKS
+    hysteresis: float = 0.05
+    _current: int = field(default=0, init=False)
+    history: list = field(default_factory=list, init=False)
+
+    def __post_init__(self):
+        self._current = max(self.candidates)
+
+    # ------------------------------------------------------------------
+    def score(self, c: int, b: int) -> float:
+        """Estimated committed tokens per second at chunk size c, batch b."""
+        n = self.tu_estimator.estimate(c)
+        t = self.latency_model.predict(b, c)
+        return n * b / t
+
+    def select(self, b: int) -> int:
+        """Pick the chunk size for the next iteration given live batch b."""
+        if b <= 0:
+            return max(self.candidates)
+        scores = {c: self.score(c, b) for c in self.candidates}
+        best = max(scores, key=scores.get)
+        cur = self._current
+        if cur in scores and scores[best] <= (1 + self.hysteresis) * scores[cur]:
+            best = cur
+        self._current = best
+        self.history.append((b, best))
+        return best
+
+    def observe(self, commit_masks, valid_lens):
+        """Feed back the realized commits of the last iteration."""
+        self.tu_estimator.update_batch(commit_masks, valid_lens)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_profile(cls, samples, candidates=DEFAULT_CHUNKS,
+                     prior_tokens_per_step: float = 3.8, **kw):
+        lm = PiecewiseAffineLatencyModel.fit(samples)
+        tu = TokenUtilEstimator(candidates,
+                                prior_tokens_per_step=prior_tokens_per_step)
+        return cls(lm, tu, tuple(candidates), **kw)
+
+
+@dataclass
+class FixedScheduler:
+    """Baseline: fixed chunk/block size (BD-<c> or AR when c == 1)."""
+    chunk: int
+    history: list = field(default_factory=list, init=False)
+
+    def select(self, b: int) -> int:
+        self.history.append((b, self.chunk))
+        return self.chunk
+
+    def observe(self, commit_masks, valid_lens):
+        pass

@@ -1,0 +1,212 @@
+"""Logical-axis sharding rules.
+
+Models annotate parameters and activations with *logical* axis names
+("batch", "embed", "heads", ...).  A :class:`Rules` object maps logical names
+to physical mesh axes.  The launcher installs rules for the production mesh;
+unit tests run with no rules installed, in which case every annotation is a
+no-op.  This mirrors the t5x/MaxText logical-axis-rules design and is the
+single knob the §Perf hillclimb turns.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Logical axis vocabulary used across the model zoo.
+#   batch      : global batch dimension (tokens dim 0)
+#   seq        : sequence dimension
+#   embed      : d_model activations dim
+#   heads      : query heads
+#   kv_heads   : key/value heads
+#   head_dim   : per-head feature dim
+#   mlp        : FFN hidden dim
+#   vocab      : vocabulary dim
+#   experts    : MoE expert dim
+#   expert_mlp : per-expert FFN hidden dim
+#   kv_seq     : cached KV sequence dim (decode); seq-sharded for split-KV
+#   state      : SSM state dim
+#   layers     : stacked-layer dim (never sharded)
+# Param-only FSDP aliases (weights can shard differently from activations):
+#   embed_p / mlp_p / vocab_p / heads_p / expert_mlp_p
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Mapping from logical axis names to mesh axes (or None)."""
+
+    table: Mapping[str, object] = field(default_factory=dict)
+
+    def spec(self, *logical: str | None) -> P:
+        """Translate a tuple of logical names into a PartitionSpec.
+
+        A mesh axis may appear at most once in a PartitionSpec; on conflict the
+        first occurrence wins and later dims fall back to None.
+        """
+        used: set[str] = set()
+        out = []
+        for name in logical:
+            axis = self.table.get(name) if name is not None else None
+            if axis is None:
+                out.append(None)
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        return P(*out)
+
+    def with_overrides(self, **kv) -> "Rules":
+        table = dict(self.table)
+        table.update(kv)
+        return replace(self, table=table)
+
+
+# ---------------------------------------------------------------------------
+# Rule presets
+# ---------------------------------------------------------------------------
+
+def training_rules(data_axes=("data",), model_axis="model", fsdp: bool = True) -> Rules:
+    """Default production training rules: DP over ``data_axes``, TP over
+    ``model_axis``, FSDP weight sharding over the data axes."""
+    da = tuple(data_axes)
+    da_key = da if len(da) > 1 else da[0]
+    table = {
+        "batch": da_key,
+        "seq": None,
+        "embed": None,
+        "heads": model_axis,
+        "kv_heads": None,
+        "head_dim": None,
+        "mlp": model_axis,
+        "vocab": model_axis,
+        "experts": model_axis,
+        "expert_mlp": da_key if fsdp else None,
+        "kv_seq": None,
+        "state": None,
+        "layers": None,
+        # FSDP param axes: shard big weight matrices along their non-TP dim.
+        "embed_p": da_key if fsdp else None,
+        "mlp_p": model_axis,
+        "vocab_p": model_axis,
+        "heads_p": model_axis,
+        "expert_mlp_p": da_key if fsdp else None,
+    }
+    return Rules(table)
+
+
+def serving_rules(data_axes=("data",), model_axis="model",
+                  seq_shard_kv: bool = True, moe_2d: bool = False) -> Rules:
+    """Serving rules: batch over data, TP over model, decode KV cache
+    sequence-sharded over the model axis (split-KV attention).
+
+    Expert weights are 2D-sharded (experts × model, expert-FFN dim × data) so
+    100B+ MoE models fit at serving time; ``moe_2d=True`` (decode) computes
+    with the f-partial shard_map MoE (no weight gathering — right for tiny
+    decode token counts), while prefill keeps the gather-based path (weight
+    gathers amortize over the 32k prompt tokens).
+    """
+    da = tuple(data_axes)
+    da_key = da if len(da) > 1 else da[0]
+    table = {
+        "batch": da_key,
+        "seq": None,
+        "embed": None,
+        "heads": model_axis,
+        "kv_heads": None,
+        "head_dim": None,
+        "mlp": model_axis,
+        "vocab": model_axis,
+        "experts": model_axis,
+        "expert_mlp": None,
+        "kv_seq": model_axis if seq_shard_kv else None,
+        "state": None,
+        "layers": None,
+        "embed_p": None,
+        "mlp_p": model_axis,
+        "vocab_p": model_axis,
+        "heads_p": model_axis,
+        "expert_mlp_p": da_key,
+        "moe_mode": "2d" if moe_2d else "gather",
+    }
+    return Rules(table)
+
+
+def long_context_rules(data_axes=("data",), model_axis="model") -> Rules:
+    """long_500k rules: batch=1 ⇒ shard the KV/state sequence over *data*
+    (sequence parallelism) and keep TP over model."""
+    return serving_rules(data_axes, model_axis, moe_2d=True).with_overrides(
+        batch=None, kv_seq="data", seq="data",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Context management
+# ---------------------------------------------------------------------------
+
+class _State(threading.local):
+    def __init__(self):
+        self.rules: Rules | None = None
+        self.mesh: jax.sharding.Mesh | None = None
+
+
+_state = _State()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None, mesh: jax.sharding.Mesh | None = None):
+    prev = (_state.rules, _state.mesh)
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def current_rules() -> Rules | None:
+    return _state.rules
+
+
+def current_mesh() -> jax.sharding.Mesh | None:
+    return _state.mesh
+
+
+def logical_spec(*logical: str | None) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P()
+    return rules.spec(*logical)
+
+
+def shard(x, *logical: str | None):
+    """Constrain activation ``x`` to the sharding implied by logical axes.
+
+    No-op when no rules are installed (single-device tests) so model code can
+    annotate unconditionally.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(*logical)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def param_specs(logical_tree):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    rules = current_rules()
+
+    def one(axes):
+        if rules is None:
+            return P()
+        return rules.spec(*axes)
+
+    return jax.tree.map(one, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

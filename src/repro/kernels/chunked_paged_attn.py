@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: chunked paged attention (the paper's custom kernel §6).
+
+Serves a variable-length *chunk* of query tokens per request against the
+paged KV cache: Q [B, c, H, D] vs pages [P, page_size, KVH, D] indirected
+through per-request block tables.  This is the TPU-native adaptation of the
+paper's Triton paged-attention kernel:
+
+* the grid is (batch, kv_head, page_slot); page indirection happens in the
+  BlockSpec ``index_map`` via scalar-prefetched block tables (the TPU
+  equivalent of the warp-level gather on GPU), so each step DMAs exactly one
+  page into VMEM;
+* GQA is handled by folding the q-heads-per-kv-head group into the row
+  dimension of the q tile ([G·c, D]), keeping the MXU matmul dense;
+* online-softmax state (m, l, acc) lives in fp32 VMEM scratch across the
+  sequential page-slot grid dimension;
+* the kernel emits flash partials (acc, m, l) so the caller can combine them
+  exactly with the in-window bidirectional part (and, under sequence
+  parallelism, with other shards' partials).
+
+Validated on CPU via ``interpret=True`` against ``ref.paged_chunk_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lens_ref,           # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,            # VMEM tiles
+            o_ref, m_ref, l_ref,            # outputs
+            acc_sc, m_sc, l_sc,             # VMEM scratch
+            *, page_size: int, n_slots: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    ctx_len = lens_ref[b]
+    base = i * page_size
+
+    @pl.when(base < ctx_len)
+    def _work():
+        q = q_ref[0, 0].astype(jnp.float32)              # [R, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [ps, D]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        R = s.shape[0]
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (R, page_size), 1)
+        valid = pos < ctx_len
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_sc[:, :1]                              # [R, 1]
+        l_prev = l_sc[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        e = jnp.exp(s - m_new)
+        e = jnp.where(valid, e, 0.0)
+        l_new = l_prev * corr + jnp.sum(e, axis=1, keepdims=True)
+        pv = jax.lax.dot(e.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        acc_sc[...] = acc_sc[...] * corr + pv
+        m_sc[...] = jnp.broadcast_to(m_new, m_sc.shape)
+        l_sc[...] = jnp.broadcast_to(l_new, l_sc.shape)
+
+    @pl.when(i == n_slots - 1)
+    def _emit():
+        o_ref[0, 0] = acc_sc[...].astype(o_ref.dtype)
+        m_ref[0, 0] = m_sc[:, :1].astype(m_ref.dtype)
+        l_ref[0, 0] = l_sc[:, :1].astype(l_ref.dtype)
+
+
+def paged_chunk_attention_kernel(q, k_pages, v_pages, block_tables, ctx_lens,
+                                 *, scale: float | None = None,
+                                 interpret: bool = False):
+    """Raw kernel invocation.
+
+    q [B, c, H, D]; k_pages/v_pages [P, page_size, KVH, D];
+    block_tables [B, n_slots] int32 (entries must be valid page indices —
+    pad with 0); ctx_lens [B] int32.
+    Returns flash partials: acc [B,H,c,D] fp32 (grouped layout), m/l [B,H,c].
+    """
+    B, c, H, D = q.shape
+    P, page_size, KVH, _ = k_pages.shape
+    G = H // KVH
+    R = G * c
+    n_slots = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+
+    # group q rows per kv head: [B, KVH, G*c, D]
+    qg = q.reshape(B, c, KVH, G, D).transpose(0, 2, 3, 1, 4) \
+        .reshape(B, KVH, R, D)
+
+    kernel = functools.partial(_kernel, page_size=page_size,
+                               n_slots=n_slots, scale=scale)
+    grid = (B, KVH, n_slots)
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, R, D), lambda b, h, i, t, ln: (b, h, 0, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, i, t, ln: (t[b, i], 0, h, 0)),
+                pl.BlockSpec((1, page_size, 1, D),
+                             lambda b, h, i, t, ln: (t[b, i], 0, h, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, R, D), lambda b, h, i, t, ln: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, R, 1), lambda b, h, i, t, ln: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, R, 1), lambda b, h, i, t, ln: (b, h, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((R, D), jnp.float32),
+                pltpu.VMEM((R, 128), jnp.float32),
+                pltpu.VMEM((R, 128), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KVH, R, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, KVH, R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KVH, R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables, ctx_lens, qg, k_pages, v_pages)
+
+    # ungroup: [B, KVH, G, c, D] → [B, c, H, D] partials
+    acc = acc.reshape(B, KVH, G, c, D).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, c, H, D)
+    m = m.reshape(B, KVH, G, c).transpose(0, 3, 1, 2).reshape(B, c, H)
+    l = l.reshape(B, KVH, G, c).transpose(0, 3, 1, 2).reshape(B, c, H)
+    return acc, m, l

@@ -1,0 +1,71 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.block_diffusion_attn import block_diffusion_attention_kernel
+from repro.kernels.chunked_paged_attn import paged_chunk_attention_kernel
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                          scale=None, interpret=None):
+    """Flash partials of chunk queries vs the paged prefix cache.
+
+    Returns (acc [B,c,H,D] fp32, m [B,c,H], l [B,c,H]); combine with the
+    in-window part via ``combine_with_window``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    return paged_chunk_attention_kernel(
+        q, k_pages, v_pages, block_tables.astype(jnp.int32),
+        ctx_lens.astype(jnp.int32), scale=scale, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_size", "scale", "interpret"))
+def paged_chunk_attention_full(q, k_pages, v_pages, block_tables, ctx_lens,
+                               win_k, win_v, win_pos, win_valid, *,
+                               block_size: int, scale=None, interpret=None):
+    """Complete chunk-step attention: paged-prefix partial (Pallas) combined
+    exactly with the bidirectional in-window part (block-causal), the full
+    per-iteration attention of Optimus chunked decoding."""
+    from repro.models.layers import block_causal_mask, sdpa_partial
+
+    interpret = _default_interpret() if interpret is None else interpret
+    acc_p, m_p, l_p = paged_chunk_attention_kernel(
+        q, k_pages, v_pages, block_tables.astype(jnp.int32),
+        ctx_lens.astype(jnp.int32), scale=scale, interpret=interpret)
+
+    B, c, H, D = q.shape
+    offs = jnp.arange(c)
+    valid = offs[None, :] < win_valid[:, None]
+    sm = block_causal_mask(win_pos, win_pos, block_size)
+    sm = (sm & valid[:, None, :] & valid[:, :, None]) | \
+        jnp.eye(c, dtype=bool)[None]
+    acc_w, m_w, l_w = sdpa_partial(q, win_k, win_v, sm[:, None], scale=scale)
+    return ref.combine_ref([(acc_p, m_p, l_p), (acc_w, m_w, l_w)],
+                           out_dtype=q.dtype)
+
+
+@partial(jax.jit, static_argnames=("block_size", "q_tile", "kv_tile",
+                                   "scale", "interpret"))
+def block_diffusion_attention(q, k, v, lengths, *, block_size: int,
+                              q_tile: int = 128, kv_tile: int = 128,
+                              scale=None, interpret=None):
+    """Block-causal flash attention (prefill / training forward)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return block_diffusion_attention_kernel(
+        q, k, v, lengths.astype(jnp.int32), block_size=block_size,
+        q_tile=q_tile, kv_tile=kv_tile, scale=scale, interpret=interpret)

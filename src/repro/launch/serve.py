@@ -1,0 +1,105 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch sdar-8b \
+        --mode elastic --dataset sharegpt --rate 2.0 --requests 100
+
+``--backend sim`` (default) runs the virtual-clock simulation calibrated to
+the chosen device; ``--backend model`` serves a real (smoke-config) model on
+CPU end-to-end through the same engine.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.latency_model import DEVICES
+from repro.core.scheduler import DEFAULT_CHUNKS, ElasticScheduler, FixedScheduler
+from repro.models.registry import build_model
+from repro.serving import (DATASETS, ModelBackend, PoissonWorkload,
+                           ServingEngine, SimBackend, chunk_distribution)
+
+
+def make_scheduler(mode: str, backend, profile):
+    if mode == "elastic":
+        samples = [(b, c, backend.analytic.step_latency(b, c, 512))
+                   for b in [1, 2, 4, 8, 16, 32, 64, 128, 256]
+                   for c in [1, 2, 4, 8, 16, 32]]
+        return ElasticScheduler.from_profile(
+            samples, prior_tokens_per_step=profile.tokens_per_step_bd32)
+    if mode == "ar":
+        return FixedScheduler(1)
+    if mode.startswith("bd"):
+        return FixedScheduler(int(mode[2:]))
+    raise ValueError(mode)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="sdar-8b")
+    ap.add_argument("--mode", default="elastic",
+                    help="elastic | ar | bd<chunk> (e.g. bd32)")
+    ap.add_argument("--backend", default="sim", choices=["sim", "model"])
+    ap.add_argument("--device", default="tpu-v5e", choices=list(DEVICES))
+    ap.add_argument("--dataset", default="sharegpt", choices=list(DATASETS))
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--obs", action="store_true",
+                    help="out-block streaming for large chunks")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    profile = DATASETS[args.dataset]
+    if args.backend == "sim":
+        cfg = get_config(args.arch)
+        backend = SimBackend(cfg, DEVICES[args.device],
+                             tokens_per_step=profile.tokens_per_step_bd32,
+                             decode_mode="ar" if args.mode == "ar"
+                             else "elastic", obs=args.obs, seed=args.seed)
+        wl = PoissonWorkload(profile, args.rate, args.requests,
+                             seed=args.seed)
+        sched = make_scheduler(args.mode, backend, profile)
+    else:
+        cfg = get_smoke_config(args.arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        backend = ModelBackend(model, params, n_slots=8, max_len=256,
+                               decode_mode="ar" if args.mode == "ar"
+                               else "elastic", obs=args.obs)
+        import numpy as np
+        rng = np.random.default_rng(args.seed)
+        wl = PoissonWorkload(profile, args.rate, args.requests,
+                             seed=args.seed, max_prompt=64, max_output=64)
+        for r in wl.requests:
+            r.prompt_len = min(r.prompt_len, 64)
+            r.max_new_tokens = min(r.max_new_tokens, 64)
+            r.prompt_tokens = rng.integers(
+                4, cfg.vocab_size, r.prompt_len).tolist()
+        # wall-clock-free scheduler from a quick analytic stand-in
+        from repro.core.latency_model import AnalyticDeviceModel, CPU_HOST
+        an = AnalyticDeviceModel(cfg, CPU_HOST)
+        samples = [(b, c, an.step_latency(b, c, 128))
+                   for b in [1, 2, 4, 8] for c in [1, 2, 4, 8, 16, 32]]
+        if args.mode == "elastic":
+            sched = ElasticScheduler.from_profile(
+                samples, prior_tokens_per_step=profile.tokens_per_step_bd32)
+        else:
+            sched = make_scheduler(args.mode, None, profile) \
+                if args.mode != "elastic" else None
+
+    engine = ServingEngine(backend, sched, max_batch=args.max_batch)
+    report = engine.run(list(wl))
+    print(f"requests: {len(report.metrics)}")
+    print(f"decode throughput: {report.throughput:.1f} tok/s")
+    print(f"P50/P90/P99 TPOT: {report.tpot_percentile(50)*1e3:.1f} / "
+          f"{report.tpot_percentile(90)*1e3:.1f} / "
+          f"{report.tpot_percentile(99)*1e3:.1f} ms")
+    print(f"token utilization: {report.token_utilization:.3f}")
+    print(f"runtime distributions: {chunk_distribution(report)}")
+
+
+if __name__ == "__main__":
+    main()

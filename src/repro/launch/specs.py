@@ -1,0 +1,249 @@
+"""Per-(arch × shape) dry-run cell construction.
+
+``build_cell`` returns the step function to lower, abstract (ShapeDtypeStruct)
+arguments — the same weak-type-correct, shardable, allocation-free stand-ins
+the dry-run contract requires — and the in_shardings derived from the model's
+logical axes under the kind-appropriate rule set.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed.sharding import (Rules, long_context_rules,
+                                        serving_rules, training_rules,
+                                        use_rules)
+from repro.launch.mesh import data_axes_of
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamW, AdamWConfig
+from repro.training.train_loop import make_train_step
+
+# decode-chunk used for the representative serve_step per family
+DECODE_CHUNK = 8
+
+# microbatch counts keeping per-device activations bounded for train_4k
+TRAIN_MICROBATCHES = {
+    "kimi-k2-1t-a32b": 16,
+    "llama4-scout-17b-a16e": 16,
+    "starcoder2-15b": 16,
+    "smollm-135m": 4,
+    "llama3.2-1b": 8,
+    "phi3-medium-14b": 16,
+    "qwen2-vl-2b": 8,
+    "jamba-1.5-large-398b": 16,
+    "seamless-m4t-large-v2": 8,
+    "rwkv6-1.6b": 8,
+    "sdar-8b": 16,
+}
+
+# encoder-decoder shape interpretation (documented in DESIGN.md):
+# train: src = seq, tgt = seq/4 (audio→text ratio); decode: src = 4096.
+ENCDEC_DECODE_SRC = 4096
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    donate_argnums: tuple
+    rules: Rules
+    meta: dict
+
+
+def _sharding_tree(mesh, rules: Rules, axes_tree):
+    def one(axes):
+        return NamedSharding(mesh, rules.spec(*axes))
+    return jax.tree.map(one, axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _abs(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _batch_axes(cfg, spec_kind, seq_first=True):
+    """Logical axes for batch entries."""
+    if spec_kind == "tokens":
+        return ("batch", "seq")
+    raise ValueError(spec_kind)
+
+
+def input_specs(arch: str, shape_name: str, cfg=None, chunk=None):
+    """Abstract model-input stand-ins for one cell (assignment item 2)."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    spec = SHAPES[shape_name]
+    B, S = spec.global_batch, spec.seq_len
+    d = cfg.d_model
+    cdt = cfg.cdt
+    if spec.kind == "train":
+        if cfg.family == "encdec":
+            return {"src_embeds": _abs((B, S, d), cdt),
+                    "src_mask": _abs((B, S), bool),
+                    "tgt_tokens": _abs((B, S // 4), jnp.int32)}
+        batch = {"tokens": _abs((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["mm_embeds"] = _abs((B, S, d), cdt)
+            batch["mm_mask"] = _abs((B, S), bool)
+        return batch
+    if spec.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"src_embeds": _abs((B, S, d), cdt),
+                    "src_mask": _abs((B, S), bool)}
+        batch = {"tokens": _abs((B, S), jnp.int32),
+                 "lengths": _abs((B,), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["mm_embeds"] = _abs((B, S, d), cdt)
+            batch["mm_mask"] = _abs((B, S), bool)
+        return batch
+    # decode / long_decode: one chunk step against a seq_len KV cache
+    c = cfg.block_size if cfg.family == "hybrid" else (chunk or DECODE_CHUNK)
+    if cfg.family == "ssm":
+        c = 1
+    return {"win_tokens": _abs((B, c), jnp.int32),
+            "win_start": _abs((B,), jnp.int32),
+            "win_valid": _abs((B,), jnp.int32),
+            "n_adv": _abs((B,), jnp.int32)}
+
+
+def _rules_for(kind: str, mesh, cfg=None) -> Rules:
+    da = data_axes_of(mesh)
+    if kind == "train":
+        rules = training_rules(da, "model")
+    elif kind == "long_decode":
+        rules = long_context_rules(da, "model")
+    elif kind == "decode":
+        rules = serving_rules(da, "model", moe_2d=True)
+    else:
+        rules = serving_rules(da, "model")
+    if cfg is not None and cfg.rule_overrides:
+        rules = rules.with_overrides(**dict(cfg.rule_overrides))
+    return rules
+
+
+def _abstract_cache(model, B, S, extra=()):
+    cfg = model.cfg
+    if cfg.family == "encdec":
+        fn = partial(model.init_cache, B, S, ENCDEC_DECODE_SRC,
+                     jnp.bfloat16)
+    else:
+        fn = partial(model.init_cache, B, S, jnp.bfloat16)
+    return jax.eval_shape(fn)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, rule_overrides=None,
+               cfg_overrides=None, chunk=None) -> Cell:
+    cfg = get_config(arch)
+    mb_override = None
+    if cfg_overrides:
+        cfg_overrides = dict(cfg_overrides)
+        mb_override = cfg_overrides.pop("microbatches", None)
+        cfg = cfg.replace(**cfg_overrides)
+    spec = SHAPES[shape_name]
+    model = build_model(cfg)
+    rules = _rules_for(spec.kind, mesh, cfg)
+    if rule_overrides:
+        rules = rules.with_overrides(
+            **{k: (tuple(v) if isinstance(v, list) else v)
+               for k, v in rule_overrides.items()})
+    with use_rules(rules, mesh):
+        params_abs = model.init(jax.random.PRNGKey(0), abstract=True)
+    params_sh = _sharding_tree(mesh, rules, model.logical_axes())
+    da = data_axes_of(mesh)
+    da_key = da if len(da) > 1 else da[0]
+    batch_spec = input_specs(arch, shape_name, cfg=cfg, chunk=chunk)
+    B, S = spec.global_batch, spec.seq_len
+    meta = {"global_batch": B, "seq_len": S, "kind": spec.kind,
+            "chunk": None}
+
+    def bsh(*dims):
+        return NamedSharding(mesh, P(*dims))
+
+    batch_shardings = {}
+    for k, v in batch_spec.items():
+        if spec.kind in ("decode", "long_decode") and spec.global_batch == 1:
+            batch_shardings[k] = bsh(*(None,) * v.ndim)
+        elif v.ndim == 1:
+            batch_shardings[k] = bsh(da_key)
+        else:
+            batch_shardings[k] = bsh(da_key, *(None,) * (v.ndim - 1))
+
+    if spec.kind == "train":
+        opt = AdamW(AdamWConfig(state_dtype="bfloat16"))
+        mb = mb_override or TRAIN_MICROBATCHES.get(arch, 8)
+        step = make_train_step(model, opt, microbatches=mb)
+        meta["microbatches"] = mb
+
+        def fn(params, opt_state, batch, seed):
+            rng = jax.random.PRNGKey(seed)
+            return step(params, opt_state, batch, rng)
+
+        opt_abs = opt.init_abstract(params_abs)
+        opt_sh = {"mu": jax.tree.map(
+            lambda s: {"m": s, "v": s}, params_sh,
+            is_leaf=lambda x: isinstance(x, NamedSharding)),
+            "step": bsh()}
+        args = (params_abs, opt_abs, batch_spec, _abs((), jnp.int32))
+        in_sh = (params_sh, opt_sh, batch_shardings, bsh())
+        return Cell(arch, shape_name, spec.kind, fn, args, in_sh,
+                    (0, 1), rules, meta)
+
+    if spec.kind == "prefill":
+        cache_abs = _abstract_cache(model, B, S + cfg.block_size)
+        with use_rules(rules, mesh):
+            cache_axes = model.cache_logical_axes(cache_abs)
+        cache_sh = _sharding_tree(mesh, rules, cache_axes)
+        if cfg.family == "encdec":
+            def fn(params, cache, batch):
+                return model.admit(params, cache, batch["src_embeds"],
+                                   batch["src_mask"])
+        else:
+            def fn(params, cache, batch):
+                logits, new_cache = model.prefill(
+                    params, batch["tokens"], batch["lengths"], cache,
+                    mm_embeds=batch.get("mm_embeds"),
+                    mm_mask=batch.get("mm_mask"), head_mode="last")
+                return logits, new_cache
+        args = (params_abs, cache_abs, batch_spec)
+        in_sh = (params_sh, cache_sh, batch_shardings)
+        return Cell(arch, shape_name, spec.kind, fn, args, in_sh,
+                    (1,), rules, meta)
+
+    # decode / long_decode ------------------------------------------------
+    c = batch_spec["win_tokens"].shape[1]
+    meta["chunk"] = c
+    cache_abs = _abstract_cache(model, B, S + cfg.block_size)
+    with use_rules(rules, mesh):
+        cache_axes = model.cache_logical_axes(cache_abs)
+    cache_sh = _sharding_tree(mesh, rules, cache_axes)
+
+    if cfg.family == "ssm":
+        def fn(params, cache, batch):
+            logits, new_cache = model.advance_states(
+                params, cache, batch["win_tokens"],
+                jnp.minimum(batch["win_valid"], 1))
+            return logits, new_cache
+    else:
+        def fn(params, cache, batch):
+            logits, win_kv = model.chunk_forward(
+                params, cache, batch["win_tokens"], batch["win_start"],
+                batch["win_valid"])
+            new_cache = model.freeze(cache, win_kv, batch["win_start"],
+                                     batch["n_adv"])
+            return logits, new_cache
+
+    args = (params_abs, cache_abs, batch_spec)
+    in_sh = (params_sh, cache_sh, batch_shardings)
+    return Cell(arch, shape_name, spec.kind, fn, args, in_sh, (1,), rules,
+                meta)

@@ -1,0 +1,60 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 100 --seq 256 --batch 8 [--smoke] [--resume]
+
+On a real TPU cluster the same entry point runs under the production mesh
+(``--mesh pod|multipod``) with the sharding rules from
+``repro.distributed.sharding``; on CPU it runs the (reduced) config directly.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed.sharding import training_rules, use_rules
+from repro.training.data import DataConfig
+from repro.training.fault_tolerance import FailureInjector
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a failure at this step (restart drill)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    global_batch=args.batch)
+    inj = FailureInjector(fail_at_steps=(args.fail_at,)) if args.fail_at \
+        else None
+    trainer = Trainer(
+        cfg, dc,
+        AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+        TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=10,
+                      microbatches=args.microbatches),
+        failure_injector=inj)
+    losses = trainer.run(resume=args.resume)
+    print(f"final loss: {losses[-1]:.4f} ({len(losses)} steps this run)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Shared model configuration and parameter-initialization helpers.
+
+One :class:`ArchConfig` dataclass covers every assigned architecture family
+(dense / moe / hybrid / ssm / encdec / vlm).  Parameters are plain nested
+dicts of jnp arrays; layer stacks are stored stacked along a leading ``L``
+axis so the forward pass is a single ``lax.scan``, which keeps HLO size (and
+therefore 512-device compile time) independent of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # identity ----------------------------------------------------------
+    name: str = "model"
+    family: str = "dense"          # dense | moe | hybrid | ssm | encdec | vlm
+    # trunk -------------------------------------------------------------
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab_size: int = 512
+    head_dim: int = 0              # 0 → d_model // n_heads
+    act: str = "silu"              # silu (SwiGLU) | gelu (GeGLU)
+    gated_mlp: bool = True         # False → plain up/act/down FFN
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    max_seq_len: int = 8192
+    # MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0              # 0 → d_ff
+    capacity_factor: float = 2.0
+    # hybrid (jamba-style) -----------------------------------------------
+    attn_period: int = 0           # 0 → every layer is attention
+    attn_offset: int = 3           # index of the attn layer inside a period
+    moe_every: int = 0             # 0 → dense FFN everywhere; k → MoE on idx%k==k-1
+    d_state: int = 16
+    d_conv: int = 4
+    mamba_expand: int = 2
+    # rwkv ----------------------------------------------------------------
+    rwkv_head_dim: int = 64
+    rwkv_lora_rank: int = 32
+    # encoder-decoder -----------------------------------------------------
+    n_enc_layers: int = 0
+    # vlm (M-RoPE) --------------------------------------------------------
+    mrope_sections: tuple = ()     # per-section rotary dims, sums to head_dim//2
+    # diffusion decoding --------------------------------------------------
+    diffusion: bool = True         # block-diffusion decoding supported
+    block_size: int = 32
+    mask_token_id: int = 3         # reserved mask-token id
+    confidence_threshold: float = 0.9
+    # dtypes --------------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    # sharding-rule overrides: ((logical_axis, mesh_axis_or_None), ...)
+    rule_overrides: tuple = ()
+    # scan/remat -----------------------------------------------------------
+    remat: bool = False
+    scan_layers: bool = True
+
+    # derived -------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def moe_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def rwkv_n_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def is_attn_layer(self, idx: int) -> bool:
+        if self.attn_period == 0:
+            return True
+        return idx % self.attn_period == self.attn_offset
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        if self.moe_every == 0:
+            return True
+        return idx % self.moe_every == self.moe_every - 1
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init exactly)."""
+        from repro.models import registry  # local import to avoid cycles
+
+        params = registry.build_model(self).init(jax.random.PRNGKey(0),
+                                                 abstract=True)
+        return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Splittable RNG stream."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def abstract_like(init_fn):
+    """Wrap an init fn so it can produce ShapeDtypeStructs instead of arrays."""
+
+    def wrapped(key, shape, dtype, *a, abstract=False, **kw):
+        if abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+        return init_fn(key, shape, dtype, *a, **kw)
+
+    return wrapped
+
+
+dense_init_a = abstract_like(dense_init)
+embed_init_a = abstract_like(embed_init)
+
+
+def zeros_a(key, shape, dtype, abstract=False):
+    if abstract:
+        return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    return jnp.zeros(shape, dtype)
+
+
+def ones_a(key, shape, dtype, abstract=False):
+    if abstract:
+        return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+    return jnp.ones(shape, dtype)

@@ -1,0 +1,264 @@
+"""Encoder–decoder LM (seamless-m4t backbone).
+
+The modality frontend is a STUB per the assignment: ``encode`` consumes
+precomputed frame embeddings [B, S_src, d] directly.  The decoder is a
+standard transformer decoder with self-attention + cross-attention; block
+diffusion (and therefore Optimus chunked decoding) applies to the decoder
+side, with cross-attention KV computed once at admission and cached.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import ArchConfig, KeyGen, dense_init_a, embed_init_a
+from repro.models.layers import (attn_output, axes_attention, axes_mlp,
+                                 axes_norm, block_causal_mask, causal_mask,
+                                 combine_partials, flash_partial,
+                                 init_attention, init_mlp, init_norm,
+                                 mlp_block, qkv_project, rms_norm,
+                                 sdpa_partial)
+from repro.models.transformer import _scatter_kv, _stack_axes, _stack_init
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        assert cfg.family == "encdec"
+        assert cfg.n_enc_layers > 0
+        self.cfg = cfg
+        self.n_periods = cfg.n_layers          # decoder depth (scan dim)
+
+    # ------------------------------------------------------------------
+    def init(self, rng, abstract: bool = False):
+        cfg = self.cfg
+        kg = KeyGen(rng)
+        enc = {
+            "norm1": _stack_init(init_norm, kg, cfg, cfg.n_enc_layers, abstract),
+            "attn": _stack_init(init_attention, kg, cfg, cfg.n_enc_layers, abstract),
+            "norm2": _stack_init(init_norm, kg, cfg, cfg.n_enc_layers, abstract),
+            "mlp": _stack_init(init_mlp, kg, cfg, cfg.n_enc_layers, abstract),
+        }
+        dec = {
+            "norm1": _stack_init(init_norm, kg, cfg, cfg.n_layers, abstract),
+            "self_attn": _stack_init(init_attention, kg, cfg, cfg.n_layers, abstract),
+            "norm_x": _stack_init(init_norm, kg, cfg, cfg.n_layers, abstract),
+            "cross_attn": _stack_init(init_attention, kg, cfg, cfg.n_layers, abstract),
+            "norm2": _stack_init(init_norm, kg, cfg, cfg.n_layers, abstract),
+            "mlp": _stack_init(init_mlp, kg, cfg, cfg.n_layers, abstract),
+        }
+        return {
+            "embed": embed_init_a(kg(), (cfg.vocab_size, cfg.d_model), cfg.pdt,
+                                  abstract=abstract),
+            "enc": enc,
+            "enc_norm": init_norm(kg, cfg, abstract=abstract),
+            "dec": dec,
+            "final_norm": init_norm(kg, cfg, abstract=abstract),
+            "lm_head": dense_init_a(kg(), (cfg.d_model, cfg.vocab_size),
+                                    cfg.pdt, abstract=abstract),
+        }
+
+    def logical_axes(self):
+        cfg = self.cfg
+        return {
+            "embed": ("vocab_p", "embed_p"),
+            "enc": {"norm1": _stack_axes(axes_norm, cfg),
+                    "attn": _stack_axes(axes_attention, cfg),
+                    "norm2": _stack_axes(axes_norm, cfg),
+                    "mlp": _stack_axes(axes_mlp, cfg)},
+            "enc_norm": axes_norm(cfg),
+            "dec": {"norm1": _stack_axes(axes_norm, cfg),
+                    "self_attn": _stack_axes(axes_attention, cfg),
+                    "norm_x": _stack_axes(axes_norm, cfg),
+                    "cross_attn": _stack_axes(axes_attention, cfg),
+                    "norm2": _stack_axes(axes_norm, cfg),
+                    "mlp": _stack_axes(axes_mlp, cfg)},
+            "final_norm": axes_norm(cfg),
+            "lm_head": ("embed_p", "vocab_p"),
+        }
+
+    # ------------------------------------------------------------------
+    def encode(self, params, src_embeds, src_mask):
+        """Bidirectional encoder over precomputed frame embeddings."""
+        cfg = self.cfg
+        B, S, _ = src_embeds.shape
+        x = shard(src_embeds.astype(cfg.cdt), "batch", "seq", "embed")
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        lengths = jnp.sum(src_mask.astype(jnp.int32), axis=-1)
+
+        def body(x, blk):
+            h = rms_norm(x, blk["norm1"]["scale"], cfg.norm_eps)
+            q, k, v = qkv_project(blk["attn"], cfg, h, pos)
+            acc, m, l = flash_partial(q, k, v, q_pos=pos, k_pos=pos,
+                                      k_valid=src_mask, kind="all")
+            out = combine_partials([(acc, m, l)], x.dtype)
+            x = x + attn_output(blk["attn"], cfg, out)
+            h = rms_norm(x, blk["norm2"]["scale"], cfg.norm_eps)
+            return x + mlp_block(blk["mlp"], cfg, h), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out, pos):
+        """Per-decoder-layer cross KV from encoder output (scan → stacked)."""
+        cfg = self.cfg
+
+        def body(_, blk):
+            _, k, v = qkv_project(blk["cross_attn"], cfg, enc_out, pos)
+            return None, (k, v)
+
+        _, (ks, vs) = jax.lax.scan(body, None, params["dec"])
+        return ks, vs                     # [L, B, S_src, KVH, hd]
+
+    def _decoder(self, params, x, positions, shared, per_layer):
+        cfg = self.cfg
+        pos1d = positions
+
+        def body(x, inp):
+            blk, lx = inp
+            h = rms_norm(x, blk["norm1"]["scale"], cfg.norm_eps)
+            q, k, v = qkv_project(blk["self_attn"], cfg, h, pos1d)
+            parts = []
+            if "cache_k" in lx:
+                kc = lx["cache_k"].astype(cfg.cdt)
+                B, S = kc.shape[0], kc.shape[1]
+                kp = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+                parts.append(flash_partial(
+                    q, kc, lx["cache_v"].astype(cfg.cdt), q_pos=pos1d,
+                    k_pos=kp, k_valid=kp < shared["cache_len"][:, None],
+                    kind="all"))
+            if "self_flash" in shared:
+                sf = shared["self_flash"]
+                T = pos1d.shape[1]
+                parts.append(flash_partial(
+                    q, k, v, q_pos=pos1d, k_pos=pos1d,
+                    k_valid=jnp.arange(T)[None, :] < sf["lengths"][:, None],
+                    kind=sf["kind"], block_size=cfg.block_size))
+            else:
+                parts.append(sdpa_partial(q, k, v, shared["self_mask"]))
+            out = combine_partials(parts, x.dtype)
+            x = x + attn_output(blk["self_attn"], cfg, out)
+
+            # cross attention
+            h = rms_norm(x, blk["norm_x"]["scale"], cfg.norm_eps)
+            B, T, _ = h.shape
+            hd = cfg.hd
+            qx = (h @ blk["cross_attn"]["wq"].astype(cfg.cdt)) \
+                .reshape(B, T, cfg.n_heads, hd)
+            kx = lx["cross_k"].astype(cfg.cdt)
+            vx = lx["cross_v"].astype(cfg.cdt)
+            Ssrc = kx.shape[1]
+            kp = jnp.broadcast_to(jnp.arange(Ssrc, dtype=jnp.int32), (B, Ssrc))
+            acc, m, l = flash_partial(qx, kx, vx, q_pos=pos1d, k_pos=kp,
+                                      k_valid=shared["src_mask"], kind="all")
+            out = combine_partials([(acc, m, l)], x.dtype)
+            x = x + attn_output(blk["cross_attn"], cfg, out)
+
+            h = rms_norm(x, blk["norm2"]["scale"], cfg.norm_eps)
+            x = x + mlp_block(blk["mlp"], cfg, h)
+            return x, (k, v)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        return jax.lax.scan(body, x, (params["dec"], per_layer))
+
+    def head(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = (x @ params["lm_head"].astype(cfg.cdt)).astype(jnp.float32)
+        return shard(logits, "batch", "seq", "vocab")
+
+    # ------------------------------------------------------------------
+    def apply(self, params, src_embeds, src_mask, tgt_tokens,
+              mask_mode="causal", tgt_lengths=None):
+        """Training forward: encode + teacher-forced decode → logits."""
+        cfg = self.cfg
+        B, T = tgt_tokens.shape
+        enc_out = self.encode(params, src_embeds, src_mask)
+        S_src = enc_out.shape[1]
+        src_pos = jnp.broadcast_to(jnp.arange(S_src, dtype=jnp.int32), (B, S_src))
+        ck, cv = self._cross_kv(params, enc_out, src_pos)
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        lengths = tgt_lengths if tgt_lengths is not None else \
+            jnp.full((B,), T, jnp.int32)
+        shared = {"self_flash": {"kind": mask_mode, "lengths": lengths},
+                  "src_mask": src_mask}
+        x = params["embed"].astype(cfg.cdt)[tgt_tokens]
+        per_layer = {"cross_k": ck, "cross_v": cv}
+        x, _ = self._decoder(params, x, pos, shared, per_layer)
+        return self.head(params, x)
+
+    # -- serving ---------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, src_len: int,
+                   dtype=jnp.bfloat16):
+        cfg = self.cfg
+        shp = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        xshp = (cfg.n_layers, batch, src_len, cfg.n_kv_heads, cfg.hd)
+        return {
+            "len": jnp.zeros((batch,), jnp.int32),
+            "k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+            "cross_k": jnp.zeros(xshp, dtype), "cross_v": jnp.zeros(xshp, dtype),
+            "src_mask": jnp.zeros((batch, src_len), bool),
+        }
+
+    def cache_logical_axes(self, cache):
+        def one(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name in ("k", "v", "cross_k", "cross_v"):
+                return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+            if name in ("len",):
+                return ("batch",)
+            return ("batch",) + (None,) * (leaf.ndim - 1)
+        return jax.tree_util.tree_map_with_path(one, cache)
+
+    def admit(self, params, cache, src_embeds, src_mask):
+        """Encode source and fill cross-attention KV (request admission)."""
+        B = src_embeds.shape[0]
+        enc_out = self.encode(params, src_embeds, src_mask)
+        S_src = enc_out.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S_src, dtype=jnp.int32), (B, S_src))
+        ck, cv = self._cross_kv(params, enc_out, pos)
+        new = dict(cache)
+        new["cross_k"] = ck.astype(cache["cross_k"].dtype)
+        new["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        new["src_mask"] = src_mask
+        new["len"] = jnp.zeros((B,), jnp.int32)
+        return new
+
+    def chunk_forward(self, params, cache, win_tokens, win_start, win_valid):
+        cfg = self.cfg
+        B, c = win_tokens.shape
+        offs = jnp.arange(c, dtype=jnp.int32)
+        positions = win_start[:, None] + offs[None, :]
+        valid = offs[None, :] < win_valid[:, None]
+        if cfg.diffusion:
+            sm = block_causal_mask(positions, positions, cfg.block_size)
+        else:
+            sm = causal_mask(positions, positions)
+        sm = (sm & valid[:, None, :] & valid[:, :, None]) | \
+            jnp.eye(c, dtype=bool)[None]
+        shared = {"self_mask": sm[:, None], "cache_len": cache["len"],
+                  "src_mask": cache["src_mask"]}
+        per_layer = {"cache_k": cache["k"], "cache_v": cache["v"],
+                     "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+        x = params["embed"].astype(cfg.cdt)[win_tokens]
+        x, (ks, vs) = self._decoder(params, x, positions, shared, per_layer)
+        logits = self.head(params, x)
+        return logits, {"k": ks, "v": vs}
+
+    def freeze(self, cache, win_kv, win_start, n_adv):
+        new_cache = dict(cache)
+        c = win_kv["k"].shape[2]
+        S = cache["k"].shape[2]
+        offs = jnp.arange(c, dtype=jnp.int32)
+        keep = offs[None, :] < n_adv[:, None]
+        idx = jnp.where(keep, win_start[:, None] + offs[None, :], S)
+        new_cache["k"] = _scatter_kv(cache["k"], win_kv["k"], idx)
+        new_cache["v"] = _scatter_kv(cache["v"], win_kv["v"], idx)
+        new_cache["len"] = cache["len"] + n_adv.astype(jnp.int32)
+        return new_cache

@@ -1,0 +1,461 @@
+"""Core neural-net layers: RMSNorm, RoPE / M-RoPE, GQA attention, gated MLP.
+
+All functions are pure; parameters are nested dicts created by the matching
+``init_*`` helpers.  Every init helper has a twin ``axes_*`` returning the
+pytree of logical-axis tuples used for sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard
+from repro.models.common import ArchConfig, dense_init_a, ones_a
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(kg, cfg: ArchConfig, abstract=False):
+    return {"scale": ones_a(kg(), (cfg.d_model,), cfg.pdt, abstract=abstract)}
+
+
+def axes_norm(cfg: ArchConfig):
+    return {"scale": ("embed",)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL style M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions [..., T] → cos/sin [..., T, dim//2] (float32)."""
+    inv = 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x [B, T, H, D], positions [B, T] → rotated x (interleaved halves)."""
+    d = x.shape[-1]
+    cos, sin = _rope_angles(positions, d, theta)          # [B, T, d/2]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections: Sequence[int]):
+    """Qwen2-VL multimodal RoPE.
+
+    x [B, T, H, D]; positions3 [B, 3, T] (temporal, height, width ids);
+    ``sections`` gives per-component rotary dims summing to D//2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    cos_parts, sin_parts = [], []
+    lo = 0
+    inv_full = 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float32) / d))
+    for comp, sec in enumerate(sections):
+        pos = positions3[:, comp, :]                       # [B, T]
+        ang = pos[..., None].astype(jnp.float32) * inv_full[lo:lo + sec]
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        lo += sec
+    cos = jnp.concatenate(cos_parts, axis=-1)[:, :, None, :]
+    sin = jnp.concatenate(sin_parts, axis=-1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_for(cfg: ArchConfig, x, positions):
+    """Dispatch RoPE vs M-RoPE.  positions is [B,T] or [B,3,T] for vlm."""
+    if cfg.mrope_sections:
+        if positions.ndim == 2:                            # text-only: t=h=w
+            positions = jnp.broadcast_to(positions[:, None, :],
+                                         (positions.shape[0], 3, positions.shape[1]))
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Attention masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_pos, k_pos):
+    """bool[..., Tq, Tk]: k may be attended iff k_pos <= q_pos."""
+    return k_pos[..., None, :] <= q_pos[..., :, None]
+
+
+def block_causal_mask(q_pos, k_pos, block_size: int):
+    """Block-diffusion mask: bidirectional within a block, causal across.
+
+    Allowed iff block(k) <= block(q).
+    """
+    qb = q_pos // block_size
+    kb = k_pos // block_size
+    return kb[..., None, :] <= qb[..., :, None]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def init_attention(kg, cfg: ArchConfig, abstract=False):
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pd = cfg.pdt
+    return {
+        "wq": dense_init_a(kg(), (d, h * hd), pd, abstract=abstract),
+        "wk": dense_init_a(kg(), (d, kvh * hd), pd, abstract=abstract),
+        "wv": dense_init_a(kg(), (d, kvh * hd), pd, abstract=abstract),
+        "wo": dense_init_a(kg(), (h * hd, d), pd, fan_in=h * hd, abstract=abstract),
+    }
+
+
+def axes_attention(cfg: ArchConfig):
+    return {
+        "wq": ("embed_p", "heads_p"),
+        "wk": ("embed_p", "heads_p"),
+        "wv": ("embed_p", "heads_p"),
+        "wo": ("heads_p", "embed_p"),
+    }
+
+
+def qkv_project(params, cfg: ArchConfig, x, positions):
+    """x [B,T,d] → q [B,T,H,D], k/v [B,T,KVH,D], RoPE applied to q and k."""
+    B, T, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.cdt
+    q = (x @ params["wq"].astype(cd)).reshape(B, T, h, hd)
+    k = (x @ params["wk"].astype(cd)).reshape(B, T, kvh, hd)
+    v = (x @ params["wv"].astype(cd)).reshape(B, T, kvh, hd)
+    rp = positions if positions.ndim > 2 else positions
+    q = rope_for(cfg, q, rp)
+    k = rope_for(cfg, k, rp)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    k = shard(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def sdpa(q, k, v, mask, *, scale: float | None = None):
+    """Grouped-query scaled dot-product attention (pure-XLA path).
+
+    q [B,T,H,D], k/v [B,S,KVH,D], mask bool[B,1,T,S] or [B,H or KVH...]-
+    broadcastable.  Softmax in fp32.
+    """
+    B, T, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, T, KVH, G, D)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    # mask [B,1,T,S] → [B,1,1,T,S]
+    logits = jnp.where(mask[:, :, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(q.dtype), v)
+    return out.reshape(B, T, H, D)
+
+
+def sdpa_partial(q, k, v, mask, *, scale: float | None = None):
+    """Unnormalized flash-style partial attention.
+
+    Returns ``(acc, m, l)`` with ``acc = Σ_j e^{logit_j - m} v_j``,
+    ``m = max_j logit_j`` and ``l = Σ_j e^{logit_j - m}`` so that partials over
+    disjoint KV sets combine exactly (used for cache+window fusion and for
+    sequence-sharded split-KV decode, where the reductions over the KV axis
+    become XLA all-reduces).  Shapes: q [B,T,H,D], k/v [B,S,KVH,D],
+    mask bool[B,1,T,S]; acc [B,T,H,D], m/l [B,T,H] (fp32).
+    """
+    B, T, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qg = q.reshape(B, T, KVH, G, D)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(mask[:, :, None, :, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)                              # [B,KVH,G,T]
+    e = jnp.exp(logits - m[..., None])
+    e = jnp.where(mask[:, :, None, :, :], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bkgts,bskd->btkgd", e.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    acc = acc.reshape(B, T, H, D)
+    m = jnp.transpose(m, (0, 3, 1, 2)).reshape(B, T, H)
+    l = jnp.transpose(l, (0, 3, 1, 2)).reshape(B, T, H)
+    return acc, m, l
+
+
+def _kind_mask(kind: str, qp, kp, block_size: int):
+    """qp [B,tq], kp [B,tk] → bool [B,tq,tk]."""
+    if kind == "all":
+        return jnp.ones((qp.shape[0], qp.shape[1], kp.shape[1]), bool)
+    if kind == "causal":
+        return causal_mask(qp, kp)
+    if kind == "block_causal":
+        return block_causal_mask(qp, kp, block_size)
+    raise ValueError(kind)
+
+
+def flash_partial(q, k, v, *, q_pos, k_pos, k_valid, kind="causal",
+                  block_size: int = 0, q_chunk: int = 512,
+                  kv_chunk: int = 1024, scale: float | None = None):
+    """Memory-efficient (Rabe–Staats / flash-style) partial attention in XLA.
+
+    Scans query chunks × KV chunks with an online softmax so peak memory is
+    O(q_chunk · kv_chunk) instead of O(T·S).  The mask is built on the fly
+    from positions (never materialized at [T,S]).  Used by the serving paths
+    (32k prefill, decode-over-cache); returns flash partials (acc, m, l) so
+    the caller can combine with other KV segments (window self-attention,
+    sequence-sharded splits).
+
+    q [B,T,H,D]; k/v [B,S,KVH,D]; q_pos [B,T]; k_pos [B,S]; k_valid [B,S].
+    Returns acc [B,T,H,D] fp32, m/l [B,T,H] fp32.
+    """
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    qc = min(q_chunk, T)
+    kc = min(kv_chunk, S)
+
+    Tp = -(-T // qc) * qc
+    Sp = -(-S // kc) * kc
+    q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, ((0, 0), (0, Tp - T)))
+    k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    k_pos = jnp.pad(k_pos, ((0, 0), (0, Sp - S)))
+    k_valid = jnp.pad(k_valid, ((0, 0), (0, Sp - S)))
+
+    nq, nk = Tp // qc, Sp // kc
+    # [nq, B, qc, ...] query chunks as scan xs
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, KVH, G, D), 1, 0)
+    qps = jnp.moveaxis(q_pos.reshape(B, nq, qc), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nk, kc, KVH, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, kc, KVH, D), 1, 0)
+    kps = jnp.moveaxis(k_pos.reshape(B, nk, kc), 1, 0)
+    kvs = jnp.moveaxis(k_valid.reshape(B, nk, kc), 1, 0)
+
+    def q_step(_, q_inp):
+        qi, qpi = q_inp                                   # [B,qc,KVH,G,D]
+
+        @jax.checkpoint
+        def kv_step(carry, kv_inp):
+            acc, m, l = carry
+            ki, vi, kpi, kvi = kv_inp                     # [B,kc,KVH,D]
+            logits = jnp.einsum("btkgd,bskd->bkgts", qi, ki,
+                                preferred_element_type=jnp.float32) * scale
+            msk = _kind_mask(kind, qpi, kpi, block_size) & kvi[:, None, :]
+            msk = msk[:, None, None, :, :]                # [B,1,1,qc,kc]
+            logits = jnp.where(msk, logits, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            corr = jnp.exp(m - m_new)
+            e = jnp.exp(logits - m_new[..., None])
+            e = jnp.where(msk, e, 0.0)
+            l = l * corr + jnp.sum(e, axis=-1)
+            pv = jnp.einsum("bkgts,bskd->bkgtd", e.astype(vi.dtype), vi,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((B, KVH, G, qc, D), jnp.float32)
+        m0 = jnp.full((B, KVH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      (ks, vs, kps, kvs))
+        return None, (acc, m, l)
+
+    _, (accs, ms, ls) = jax.lax.scan(q_step, None, (qs, qps))
+    # accs [nq, B, KVH, G, qc, D] → [B, T, H, D]
+    acc = jnp.moveaxis(accs, 0, 1).transpose(0, 1, 4, 2, 3, 5) \
+        .reshape(B, Tp, H, D)[:, :T]
+    m = jnp.moveaxis(ms, 0, 1).transpose(0, 1, 4, 2, 3).reshape(B, Tp, H)[:, :T]
+    l = jnp.moveaxis(ls, 0, 1).transpose(0, 1, 4, 2, 3).reshape(B, Tp, H)[:, :T]
+    return acc, m, l
+
+
+def flash_partial_aligned(q, k, v, *, lengths, kind="causal",
+                          block_size: int = 0, chunk: int = 512,
+                          scale: float | None = None):
+    """Triangular flash attention for position-aligned full sequences.
+
+    For causal / block-causal masks over contiguous positions 0..T-1, any kv
+    chunk strictly above the diagonal is fully masked.  Instead of scanning
+    the full nq×nk rectangle and masking (≈2× wasted MXU work + traffic),
+    scan only the nq(nq+1)/2 lower-triangular (q-chunk, kv-chunk) pairs —
+    the pair list is static, so the savings are structural (visible in HLO
+    FLOPs, real on TPU).  Requires chunk % block_size == 0 so diffusion
+    blocks never straddle a chunk boundary.
+
+    Returns flash partials (acc fp32 [B,T,H,D], m, l [B,T,H]).
+    """
+    B, T, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / np.sqrt(D)
+    chunk = min(chunk, T)
+    if block_size:
+        chunk = max(chunk - chunk % block_size, block_size)
+    if T % chunk != 0:
+        # fall back to the generic path for ragged lengths
+        pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        return flash_partial(q, k, v, q_pos=pos, k_pos=pos,
+                             k_valid=jnp.arange(T)[None] < lengths[:, None],
+                             kind=kind, block_size=block_size, scale=scale)
+    nq = T // chunk
+    pairs = [(qi, ki) for qi in range(nq) for ki in range(qi + 1)]
+    qi_arr = jnp.array([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.array([p[1] for p in pairs], jnp.int32)
+    first = jnp.array([p[1] == 0 for p in pairs])
+    last = jnp.array([p[1] == p[0] for p in pairs])
+
+    qs = jnp.moveaxis(q.reshape(B, nq, chunk, KVH, G, D), 1, 0)
+    ks = jnp.moveaxis(k.reshape(B, nq, chunk, KVH, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nq, chunk, KVH, D), 1, 0)
+
+    acc0 = jnp.zeros((B, KVH, G, chunk, D), jnp.float32)
+    m0 = jnp.full((B, KVH, G, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G, chunk), jnp.float32)
+    out_acc0 = jnp.zeros((nq,) + acc0.shape, jnp.float32)
+    out_m0 = jnp.full((nq,) + m0.shape, NEG_INF, jnp.float32)
+    out_l0 = jnp.zeros((nq,) + l0.shape, jnp.float32)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        acc, m, l, out_acc, out_m, out_l = carry
+        qi, ki, fst, lst = inp
+        qb = jax.lax.dynamic_index_in_dim(qs, qi, 0, keepdims=False)
+        kb = jax.lax.dynamic_index_in_dim(ks, ki, 0, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vs, ki, 0, keepdims=False)
+        acc = jnp.where(fst, 0.0, acc)
+        m = jnp.where(fst, NEG_INF, m)
+        l = jnp.where(fst, 0.0, l)
+        logits = jnp.einsum("btkgd,bskd->bkgts", qb, kb,
+                            preferred_element_type=jnp.float32) * scale
+        qpos = qi * chunk + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (chunk, chunk), 0)
+        kpos = ki * chunk + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (chunk, chunk), 1)
+        if kind == "block_causal":
+            ok = kpos // block_size <= qpos // block_size
+        else:
+            ok = kpos <= qpos
+        ok = ok[None] & (ki * chunk + jnp.arange(chunk)[None, None, :]
+                         < lengths[:, None, None])
+        okb = ok[:, None, None]
+        logits = jnp.where(okb, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        corr = jnp.exp(m - m_new)
+        e = jnp.exp(logits - m_new[..., None])
+        e = jnp.where(okb, e, 0.0)
+        l = l * corr + jnp.sum(e, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgts,bskd->bkgtd", e.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        m = m_new
+
+        def put(buf, val):
+            cur = jax.lax.dynamic_index_in_dim(buf, qi, 0, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                buf, jnp.where(lst, val, cur), qi, 0)
+
+        out_acc = put(out_acc, acc)
+        out_m = put(out_m, m)
+        out_l = put(out_l, l)
+        return (acc, m, l, out_acc, out_m, out_l), None
+
+    (_, _, _, out_acc, out_m, out_l), _ = jax.lax.scan(
+        step, (acc0, m0, l0, out_acc0, out_m0, out_l0),
+        (qi_arr, ki_arr, first, last))
+    # [nq, B, KVH, G, chunk, D] → [B, T, H, D]
+    acc = jnp.moveaxis(out_acc, 0, 1).transpose(0, 1, 4, 2, 3, 5) \
+        .reshape(B, T, H, D)
+    m = jnp.moveaxis(out_m, 0, 1).transpose(0, 1, 4, 2, 3).reshape(B, T, H)
+    l = jnp.moveaxis(out_l, 0, 1).transpose(0, 1, 4, 2, 3).reshape(B, T, H)
+    return acc, m, l
+
+
+def combine_partials(parts, out_dtype):
+    """Combine flash partials [(acc, m, l), ...] into normalized output."""
+    m_g = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_g = jnp.maximum(m_g, m)
+    acc_g = 0.0
+    l_g = 0.0
+    for acc, m, l in parts:
+        corr = jnp.exp(m - m_g)
+        acc_g = acc_g + acc * corr[..., None]
+        l_g = l_g + l * corr
+    return (acc_g / jnp.clip(l_g, 1e-30)[..., None]).astype(out_dtype)
+
+
+def attn_output(params, cfg: ArchConfig, out):
+    B, T = out.shape[:2]
+    y = out.reshape(B, T, -1) @ params["wo"].astype(cfg.cdt)
+    return shard(y, "batch", "seq", "embed")
+
+
+def attention_block(params, cfg: ArchConfig, x, positions, mask):
+    q, k, v = qkv_project(params, cfg, x, positions)
+    out = sdpa(q, k, v, mask)
+    return attn_output(params, cfg, out), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def init_mlp(kg, cfg: ArchConfig, abstract=False, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = cfg.pdt
+    out = {
+        "w_up": dense_init_a(kg(), (d, f), pd, abstract=abstract),
+        "w_down": dense_init_a(kg(), (f, d), pd, fan_in=f, abstract=abstract),
+    }
+    if cfg.gated_mlp:
+        out["w_gate"] = dense_init_a(kg(), (d, f), pd, abstract=abstract)
+    return out
+
+
+def axes_mlp(cfg: ArchConfig):
+    out = {"w_up": ("embed_p", "mlp_p"),
+           "w_down": ("mlp_p", "embed_p")}
+    if cfg.gated_mlp:
+        out["w_gate"] = ("embed_p", "mlp_p")
+    return out
+
+
+def mlp_block(params, cfg: ArchConfig, x):
+    cd = cfg.cdt
+    u = x @ params["w_up"].astype(cd)
+    if cfg.gated_mlp:
+        g = _act(cfg.act)(x @ params["w_gate"].astype(cd))
+        h = g * u
+    else:
+        h = _act(cfg.act)(u)
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(h @ params["w_down"].astype(cd), "batch", "seq", "embed")

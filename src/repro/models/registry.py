@@ -1,0 +1,13 @@
+"""Model registry: build a model object from an ArchConfig."""
+
+from __future__ import annotations
+
+from repro.models.common import ArchConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import TransformerLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return TransformerLM(cfg)

@@ -1,0 +1,266 @@
+"""State-space sequence mixers: Mamba (selective SSM, for Jamba) and RWKV6.
+
+Both expose the same protocol:
+
+* ``*_seq(params, cfg, x, state)`` — process ``x [B,T,d]`` given an incoming
+  recurrent state, return ``(y [B,T,d], new_state)``.  Used for training,
+  prefill, and diffusion-window recompute (T = chunk size).
+* fresh states from ``*_init_state(cfg, batch)``.
+
+Training uses a chunked ``lax.scan`` (inner chunk rematerialized) so backward
+memory is O(T/chunk) states instead of O(T).  All recurrences accumulate in
+fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ArchConfig, dense_init_a, zeros_a
+
+
+def _chunked_scan(step, carry, xs, T: int, chunk: int, remat: bool):
+    """scan ``step`` over axis-0 of xs (length T) in chunks of ``chunk``."""
+    if T <= chunk or T % chunk != 0:
+        return jax.lax.scan(step, carry, xs)
+
+    def inner(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    if remat:
+        inner = jax.checkpoint(inner)
+    nc = T // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape((nc, chunk) + a.shape[1:]), xs)
+    carry, ys_c = jax.lax.scan(inner, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((T,) + a.shape[2:]), ys_c)
+    return carry, ys
+
+
+# ===========================================================================
+# Mamba (selective SSM, mamba-1 as used by Jamba)
+# ===========================================================================
+
+def mamba_dims(cfg: ArchConfig):
+    d_inner = cfg.mamba_expand * cfg.d_model
+    dt_rank = max(1, int(np.ceil(cfg.d_model / 16)))
+    return d_inner, dt_rank
+
+
+def init_mamba(kg, cfg: ArchConfig, abstract=False):
+    d = cfg.d_model
+    di, dtr = mamba_dims(cfg)
+    ds, dc = cfg.d_state, cfg.d_conv
+    pd = cfg.pdt
+
+    def alog(key, shape, dtype, abstract=False):
+        if abstract:
+            return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+        a = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), shape)
+        return jnp.log(a).astype(dtype)
+
+    return {
+        "in_proj": dense_init_a(kg(), (d, 2 * di), pd, abstract=abstract),
+        "conv_w": dense_init_a(kg(), (dc, di), pd, fan_in=dc, abstract=abstract),
+        "conv_b": zeros_a(kg(), (di,), pd, abstract=abstract),
+        "x_proj": dense_init_a(kg(), (di, dtr + 2 * ds), pd, abstract=abstract),
+        "dt_proj": dense_init_a(kg(), (dtr, di), pd, abstract=abstract),
+        "dt_bias": zeros_a(kg(), (di,), pd, abstract=abstract),
+        "a_log": alog(kg(), (di, ds), pd, abstract=abstract),
+        "d_skip": zeros_a(kg(), (di,), pd, abstract=abstract),
+        "out_proj": dense_init_a(kg(), (di, d), pd, fan_in=di, abstract=abstract),
+    }
+
+
+def axes_mamba(cfg: ArchConfig):
+    return {
+        "in_proj": ("embed_p", "mlp_p"),
+        "conv_w": (None, "mlp_p"),
+        "conv_b": ("mlp_p",),
+        "x_proj": ("mlp_p", None),
+        "dt_proj": (None, "mlp_p"),
+        "dt_bias": ("mlp_p",),
+        "a_log": ("mlp_p", "state"),
+        "d_skip": ("mlp_p",),
+        "out_proj": ("mlp_p", "embed_p"),
+    }
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, _ = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_seq(params, cfg: ArchConfig, x, state, *, chunk: int = 256):
+    """x [B,T,d] → (y [B,T,d], new state)."""
+    B, T, d = x.shape
+    di, dtr = mamba_dims(cfg)
+    ds = cfg.d_state
+    cd = cfg.cdt
+
+    xz = x @ params["in_proj"].astype(cd)
+    xi, z = jnp.split(xz, 2, axis=-1)                       # [B,T,di]
+
+    # causal depthwise conv with carried state
+    conv_in = jnp.concatenate([state["conv"].astype(cd), xi], axis=1)
+    kern = params["conv_w"].astype(cd)                      # [dc, di]
+    dc = cfg.d_conv
+    xc = sum(conv_in[:, i:i + T, :] * kern[i] for i in range(dc))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(cd))
+    new_conv = conv_in[:, T:T + dc - 1, :] if T >= dc - 1 else \
+        jnp.concatenate([state["conv"].astype(cd), xi], 1)[:, -(dc - 1):, :]
+
+    # data-dependent dt, B, C — small projections precomputed for the whole
+    # sequence; the O(T·d_inner·d_state) discretized tensors (dA, dB·x) are
+    # formed PER STEP inside the scan so peak memory stays O(d_inner·d_state)
+    proj = xc @ params["x_proj"].astype(cd)
+    dt, Bc, Cc = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(cd)
+                         + params["dt_bias"].astype(cd)).astype(jnp.float32)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))       # [di, ds]
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp                           # [B,di],[B,ds]...
+        da_t = jnp.exp(dt_t[..., None] * A)                 # [B,di,ds]
+        dbx_t = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = da_t * h + dbx_t                                # [B,di,ds]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bc.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cc.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(xc.astype(jnp.float32), 1, 0))
+    h, ys = _chunked_scan(step, state["ssm"], xs, T, chunk, cfg.remat)
+    y = jnp.moveaxis(ys, 0, 1)                              # [B,T,di]
+    y = y + xc.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)
+    y = (y.astype(cd) * jax.nn.silu(z)) @ params["out_proj"].astype(cd)
+    return y, {"conv": new_conv.astype(x.dtype), "ssm": h}
+
+
+# ===========================================================================
+# RWKV6 ("Finch") — data-dependent decay linear attention
+# ===========================================================================
+
+def init_rwkv_timemix(kg, cfg: ArchConfig, abstract=False):
+    d = cfg.d_model
+    hn, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    r = cfg.rwkv_lora_rank
+    pd = cfg.pdt
+    return {
+        "mu": zeros_a(kg(), (5, d), pd, abstract=abstract),   # r,k,v,g,w shifts
+        "wr": dense_init_a(kg(), (d, d), pd, abstract=abstract),
+        "wk": dense_init_a(kg(), (d, d), pd, abstract=abstract),
+        "wv": dense_init_a(kg(), (d, d), pd, abstract=abstract),
+        "wg": dense_init_a(kg(), (d, d), pd, abstract=abstract),
+        "w0": zeros_a(kg(), (d,), pd, abstract=abstract),
+        "w_lora_a": dense_init_a(kg(), (d, r), pd, abstract=abstract),
+        "w_lora_b": dense_init_a(kg(), (r, d), pd, fan_in=r, abstract=abstract),
+        "bonus_u": zeros_a(kg(), (hn, hd), pd, abstract=abstract),
+        "ln_scale": zeros_a(kg(), (d,), pd, abstract=abstract),
+        "wo": dense_init_a(kg(), (d, d), pd, abstract=abstract),
+    }
+
+
+def axes_rwkv_timemix(cfg: ArchConfig):
+    return {
+        "mu": (None, "embed"), "wr": ("embed_p", "heads_p"),
+        "wk": ("embed_p", "heads_p"), "wv": ("embed_p", "heads_p"),
+        "wg": ("embed_p", "heads_p"), "w0": ("heads_p",),
+        "w_lora_a": ("embed_p", None), "w_lora_b": (None, "heads_p"),
+        "bonus_u": ("heads", "head_dim"), "ln_scale": ("heads_p",),
+        "wo": ("heads_p", "embed_p"),
+    }
+
+
+def init_rwkv_chanmix(kg, cfg: ArchConfig, abstract=False):
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.pdt
+    return {
+        "mu": zeros_a(kg(), (2, d), pd, abstract=abstract),   # k, r shifts
+        "wk": dense_init_a(kg(), (d, f), pd, abstract=abstract),
+        "wv": dense_init_a(kg(), (f, d), pd, fan_in=f, abstract=abstract),
+        "wr": dense_init_a(kg(), (d, d), pd, abstract=abstract),
+    }
+
+
+def axes_rwkv_chanmix(cfg: ArchConfig):
+    return {"mu": (None, "embed"), "wk": ("embed_p", "mlp_p"),
+            "wv": ("mlp_p", "embed_p"), "wr": ("embed_p", "embed_p")}
+
+
+def rwkv_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    hn, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    return {
+        "tm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, hn, hd, hd), jnp.float32),
+    }
+
+
+def _token_shift(x, prev):
+    """[B,T,d], prev [B,d] → x shifted right by one with ``prev`` at t=0."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _group_norm(x, scale, eps=1e-5):
+    """Per-head LayerNorm: x [B,T,Hn,hd]."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, -1, keepdims=True)
+    var = jnp.var(x32, -1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    B, T, hn, hd = x.shape
+    s = (1.0 + scale.astype(jnp.float32)).reshape(hn, hd)
+    return (y * s).reshape(B, T, hn * hd)
+
+
+def rwkv_timemix(params, cfg: ArchConfig, x, state, *, chunk: int = 256):
+    """RWKV6 WKV time-mix. x [B,T,d] → (y, new_state)."""
+    B, T, d = x.shape
+    hn, hd = cfg.rwkv_n_heads, cfg.rwkv_head_dim
+    cd = cfg.cdt
+    prev = _token_shift(x, state["tm_prev"].astype(x.dtype))
+    mu = params["mu"].astype(cd)
+    xr, xk, xv, xg, xw = (x + (prev - x) * mu[i] for i in range(5))
+    r = (xr @ params["wr"].astype(cd)).reshape(B, T, hn, hd)
+    k = (xk @ params["wk"].astype(cd)).reshape(B, T, hn, hd)
+    v = (xv @ params["wv"].astype(cd)).reshape(B, T, hn, hd)
+    g = jax.nn.silu(xg @ params["wg"].astype(cd))
+    # data-dependent decay (the RWKV6 "Finch" contribution)
+    w = params["w0"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ params["w_lora_a"].astype(cd))
+         @ params["w_lora_b"].astype(cd)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w)).reshape(B, T, hn, hd)          # decay ∈ (0,1)
+    u = params["bonus_u"].astype(jnp.float32)
+
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                            # [B,hn,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,hn,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r32, k32, v32, w))
+    S, ys = _chunked_scan(step, state["wkv"], xs, T, chunk, cfg.remat)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, hn, hd)
+    y = _group_norm(y, params["ln_scale"]) * g.astype(jnp.float32)
+    y = y.astype(cd) @ params["wo"].astype(cd)
+    return y, {"tm_prev": x[:, -1, :], "wkv": S}
+
+
+def rwkv_chanmix(params, cfg: ArchConfig, x, state):
+    cd = cfg.cdt
+    prev = _token_shift(x, state["cm_prev"].astype(x.dtype))
+    mu = params["mu"].astype(cd)
+    xk = x + (prev - x) * mu[0]
+    xr = x + (prev - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ params["wk"].astype(cd)))
+    kv = k @ params["wv"].astype(cd)
+    y = jax.nn.sigmoid(xr @ params["wr"].astype(cd)) * kv
+    return y, {"cm_prev": x[:, -1, :]}

@@ -1,0 +1,447 @@
+"""Execution backends for the serving engine.
+
+* :class:`SimBackend` — virtual-clock backend: commits come from the
+  calibrated :class:`CommitSimulator`, latency from the analytic roofline
+  device model.  This reproduces the paper's serving-scale experiments
+  deterministically on CPU.
+* :class:`ModelBackend` — real-model backend: a (tiny) JAX model runs
+  end-to-end; commits come from actual softmax confidences.  Used by the
+  examples and integration tests (and, on real TPUs, by production serving
+  with the Pallas chunked-paged-attention kernel swapped in).
+
+Both expose the same protocol:
+    can_admit(request)        -> bool
+    admit(request)            -> prefill latency (s)
+    decode_step(rids, chunk)  -> (latency_s, {rid: StepInfo})
+    release(rid)
+    state(rid)                -> decode state (ChunkedDecodeState or ARState)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.chunked import ChunkedDecodeState
+from repro.core.diffusion import softmax_confidence
+from repro.core.latency_model import AnalyticDeviceModel, DeviceSpec, TPU_V5E
+from repro.models.common import ArchConfig
+from repro.serving.kv_pool import PagedKVAllocator
+from repro.serving.request import Request
+from repro.serving.workload import CommitSimulator
+
+
+@dataclass
+class StepInfo:
+    n_committed: int
+    commit_mask: np.ndarray
+    valid_len: int
+    done: bool
+
+
+@dataclass
+class ARState:
+    """Autoregressive decode bookkeeping (TU = 100% by construction)."""
+    prompt_len: int
+    max_new_tokens: int
+    eos_token: int | None = None
+    committed: np.ndarray = field(init=False)
+    frozen: int = 0                 # == tokens generated
+    steps: int = 0
+    computed_tokens: int = 0
+    gen_limit: int = field(init=False)
+    committed_history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.committed = np.full(self.max_new_tokens, -1, np.int64)
+        self.gen_limit = self.max_new_tokens
+
+    @property
+    def n_committed(self):
+        return int((self.committed[:self.gen_limit] != -1).sum())
+
+    @property
+    def done(self):
+        return bool((self.committed[:self.gen_limit] != -1).all())
+
+    @property
+    def output_tokens(self):
+        return [int(t) for t in self.committed[:self.gen_limit]]
+
+    @property
+    def token_utilization(self):
+        return 1.0
+
+    def commit(self, tok: int):
+        pos = self.frozen
+        self.committed[pos] = tok
+        if self.eos_token is not None and tok == self.eos_token:
+            self.gen_limit = min(self.gen_limit, pos + 1)
+        self.frozen += 1
+        self.steps += 1
+        self.computed_tokens += 1
+        self.committed_history.append(1)
+
+
+def _decode_mode_for(cfg: ArchConfig, decode_mode: str) -> str:
+    if decode_mode == "ar" or not cfg.diffusion or cfg.family == "ssm":
+        return "ar"
+    if cfg.family == "hybrid":
+        return "block_pinned"
+    return "slide"
+
+
+# ===========================================================================
+# Virtual-clock simulation backend
+# ===========================================================================
+
+class SimBackend:
+    """Virtual-clock serving backend over the analytic device model."""
+
+    def __init__(self, cfg: ArchConfig, device: DeviceSpec = TPU_V5E,
+                 n_chips: int = 1, tokens_per_step: float = 3.8,
+                 gamma: float = 0.95, decode_mode: str = "elastic",
+                 kv_pool_pages: int = 1 << 16, page_size: int = 16,
+                 obs: bool = False, obs_policy: str = "large_chunk",
+                 seed: int = 0, include_prefill: bool = True):
+        """obs_policy: the paper enables out-block streaming only for the
+        largest chunk (§7.2) — "large_chunk" applies OBS when the scheduler
+        picks chunk == block_size; "off"/"always" override."""
+        self.cfg = cfg
+        self.analytic = AnalyticDeviceModel(cfg, device, n_chips)
+        self.sim = CommitSimulator(tokens_per_step, gamma, cfg.block_size,
+                                   cfg.confidence_threshold, seed)
+        self.kv = PagedKVAllocator(kv_pool_pages, page_size)
+        self.decode_mode = decode_mode
+        self.obs = obs
+        self.obs_policy = "always" if obs else obs_policy
+        self.include_prefill = include_prefill
+        self._states: dict[int, object] = {}
+        self._rng = np.random.default_rng(seed + 1)
+
+    # ------------------------------------------------------------------
+    def can_admit(self, req: Request) -> bool:
+        return self.kv.can_admit(req.prompt_len + req.max_new_tokens)
+
+    def admit(self, req: Request) -> float:
+        mode = _decode_mode_for(self.cfg, self.decode_mode)
+        if mode == "ar":
+            st = ARState(req.prompt_len, req.max_new_tokens)
+        else:
+            st = ChunkedDecodeState(
+                prompt_len=req.prompt_len, max_new_tokens=req.max_new_tokens,
+                block_size=self.cfg.block_size,
+                threshold=self.cfg.confidence_threshold,
+                mask_token=self.cfg.mask_token_id, eos_token=None,
+                mode=mode, obs=self.obs)
+        self._states[req.rid] = st
+        self.kv.allocate(req.rid, req.prompt_len + req.max_new_tokens)
+        if not self.include_prefill:
+            return 0.0
+        return self.analytic.step_latency(1, req.prompt_len,
+                                          ctx=req.prompt_len / 2)
+
+    def release(self, rid: int):
+        self.kv.free(rid)
+        self._states.pop(rid)
+
+    def state(self, rid: int):
+        return self._states[rid]
+
+    # ------------------------------------------------------------------
+    def decode_step(self, rids, chunk: int):
+        infos = {}
+        ctxs, eff_chunks = [], []
+        for rid in rids:
+            st = self._states[rid]
+            if isinstance(st, ARState):
+                st.commit(int(self._rng.integers(5, 1000)))
+                infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
+                ctxs.append(st.prompt_len + st.frozen)
+                eff_chunks.append(1)
+                continue
+            if st.mode == "slide":
+                st.obs = (self.obs_policy == "always" or
+                          (self.obs_policy == "large_chunk"
+                           and chunk >= self.cfg.block_size))
+            toks, start, valid, cai = st.window(chunk)
+            if valid == 0:
+                infos[rid] = StepInfo(0, np.zeros(len(toks), bool), 0, st.done)
+                ctxs.append(st.prompt_len + st.frozen)
+                continue
+            first_unc = next((i for i in range(valid) if not cai[i]), valid)
+            depths = np.maximum(np.arange(len(toks)) - first_unc, 0)
+            conf = self.sim.confidences(depths)
+            tok = self._rng.integers(5, 1000, size=len(toks))
+            commit_mask, n_adv = st.apply_step(conf, tok, valid, cai)
+            st.advance(n_adv)
+            infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask, valid,
+                                  st.done)
+            ctxs.append(st.prompt_len + st.frozen)
+            eff_chunks.append(valid)
+        b = max(1, len(rids))
+        c_eff = max(1, int(round(float(np.mean(eff_chunks)))) if eff_chunks
+                    else 1)
+        ctx = float(np.mean(ctxs)) if ctxs else 1.0
+        return self.analytic.step_latency(b, c_eff, ctx), infos
+
+
+# ===========================================================================
+# Real-model backend
+# ===========================================================================
+
+class ModelBackend:
+    """Batched-slot real-model backend (decoder-only families).
+
+    All occupied slots advance together each iteration with the
+    scheduler-chosen chunk size; idle slots are masked via win_valid = 0.
+    Hybrid block commits and rwkv AR steps run through ``advance_states``
+    with a masked state-merge so inactive slots' recurrent states are
+    untouched.  Encoder–decoder serving is exercised through SimBackend and
+    model-level tests.
+    """
+
+    def __init__(self, model, params, n_slots: int = 8, max_len: int = 512,
+                 decode_mode: str = "elastic", obs: bool = False,
+                 cache_dtype=np.float32):
+        import jax
+        import jax.numpy as jnp
+        self.jax, self.jnp = jax, jnp
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.decode_mode = decode_mode
+        self.obs = obs
+        self.cache = model.init_cache(n_slots, max_len, dtype=cache_dtype)
+        self._slot_of: dict[int, int] = {}
+        self._free_slots = list(range(n_slots - 1, -1, -1))
+        self._states: dict[int, object] = {}
+        self._req: dict[int, Request] = {}
+
+        self._chunk_fwd = jax.jit(model.chunk_forward)
+        self._freeze = jax.jit(model.freeze)
+        self._advance = jax.jit(model.advance_states)
+        self._prefill = jax.jit(self._prefill_impl)
+        self._merge = jax.jit(self._merge_impl)
+
+    # -- jit bodies ------------------------------------------------------
+    def _prefill_impl(self, params, cache, tokens, length, slot):
+        """Prefill one request into its slot; returns (last-pos logits, cache)."""
+        jnp = self.jnp
+        sub = {}
+        for k, v in cache.items():
+            if k in ("k", "v"):
+                sub[k] = jnp.take(v, slot[None], axis=1)
+            elif k == "len":
+                sub[k] = jnp.take(v, slot[None], axis=0)
+        if "states" in cache:
+            sub["states"] = self.jax.tree.map(
+                lambda a: jnp.take(a, slot[None], axis=1), cache["states"])
+        logits, new_sub = self.model.prefill(params, tokens[None],
+                                             length[None], sub)
+        out = dict(cache)
+        for k in ("k", "v"):
+            if k in cache:
+                out[k] = cache[k].at[:, slot].set(new_sub[k][:, 0])
+        if "states" in cache:
+            out["states"] = self.jax.tree.map(
+                lambda full, new: full.at[:, slot].set(new[:, 0]),
+                cache["states"], new_sub["states"])
+        out["len"] = cache["len"].at[slot].set(new_sub["len"][0])
+        last = jnp.take_along_axis(
+            logits, (length - 1)[None, None, None], axis=1)[0, 0]
+        return last, out
+
+    def _merge_impl(self, old_states, new_states, slot_mask):
+        def one(old, new):
+            m = slot_mask.reshape((1, -1) + (1,) * (old.ndim - 2))
+            return self.jnp.where(m, new, old)
+        return self.jax.tree.map(one, old_states, new_states)
+
+    # ------------------------------------------------------------------
+    def can_admit(self, req: Request) -> bool:
+        return bool(self._free_slots) and \
+            req.prompt_len + req.max_new_tokens <= self.max_len
+
+    def admit(self, req: Request) -> float:
+        jnp = self.jnp
+        slot = self._free_slots.pop()
+        self._slot_of[req.rid] = slot
+        self._req[req.rid] = req
+        mode = _decode_mode_for(self.cfg, self.decode_mode)
+        if mode == "ar":
+            st = ARState(req.prompt_len, req.max_new_tokens, req.eos_token)
+        else:
+            st = ChunkedDecodeState(
+                prompt_len=req.prompt_len, max_new_tokens=req.max_new_tokens,
+                block_size=self.cfg.block_size,
+                threshold=self.cfg.confidence_threshold,
+                mask_token=self.cfg.mask_token_id, eos_token=req.eos_token,
+                mode=mode, obs=self.obs)
+        self._states[req.rid] = st
+
+        toks = np.zeros(self.max_len, np.int32)
+        pt = np.asarray(req.prompt_tokens, np.int32)
+        toks[:len(pt)] = pt
+        last_logits, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(toks),
+            jnp.asarray(req.prompt_len, jnp.int32),
+            jnp.asarray(slot, jnp.int32))
+        if isinstance(st, ARState):
+            # first generated token comes straight from prefill logits
+            # (counts as one computed token: the prefill's last position)
+            _, tok = softmax_confidence(np.asarray(last_logits))
+            st.commit(int(tok))
+        return 0.0
+
+    def release(self, rid: int):
+        self._free_slots.append(self._slot_of.pop(rid))
+        self._states.pop(rid)
+        self._req.pop(rid)
+
+    def state(self, rid: int):
+        return self._states[rid]
+
+    # ------------------------------------------------------------------
+    def _step_ar(self, ar_rids, infos):
+        """AR decode for attention families: window = last committed token,
+        causal logits predict the next one; its KV freezes immediately."""
+        jnp = self.jnp
+        B = self.n_slots
+        win = np.full((B, 1), self.cfg.mask_token_id, np.int64)
+        start = np.zeros(B, np.int64)
+        valid = np.zeros(B, np.int64)
+        n_adv = np.zeros(B, np.int64)
+        for rid in ar_rids:
+            st = self._states[rid]
+            slot = self._slot_of[rid]
+            win[slot, 0] = st.committed[st.frozen - 1]
+            start[slot] = st.prompt_len + st.frozen - 1
+            valid[slot] = 1
+            n_adv[slot] = 1
+        logits, win_kv = self._chunk_fwd(
+            self.params, self.cache, jnp.asarray(win, jnp.int32),
+            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32))
+        logits = np.asarray(logits)
+        if win_kv is not None:
+            self.cache = self._freeze(self.cache, win_kv,
+                                      jnp.asarray(start, jnp.int32),
+                                      jnp.asarray(n_adv, jnp.int32))
+        for rid in ar_rids:
+            st = self._states[rid]
+            slot = self._slot_of[rid]
+            _, tok = softmax_confidence(logits[slot, 0])
+            st.commit(int(tok))
+            infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
+
+    def _step_ar_recurrent(self, ar_rids, infos):
+        """AR decode for recurrent (rwkv) family via advance_states."""
+        jnp = self.jnp
+        B = self.n_slots
+        toks = np.full((B, 1), self.cfg.mask_token_id, np.int64)
+        lens = np.zeros(B, np.int64)
+        mask = np.zeros(B, bool)
+        for rid in ar_rids:
+            st = self._states[rid]
+            slot = self._slot_of[rid]
+            toks[slot, 0] = st.committed[st.frozen - 1] if st.frozen else \
+                self._req[rid].prompt_tokens[-1]
+            lens[slot] = 1
+            mask[slot] = True
+        old_states = self.cache.get("states")
+        logits, new_cache = self._advance(self.params, self.cache,
+                                          jnp.asarray(toks, jnp.int32),
+                                          jnp.asarray(lens, jnp.int32))
+        if old_states is not None:
+            new_cache = dict(new_cache)
+            new_cache["states"] = self._merge(old_states,
+                                              new_cache["states"],
+                                              jnp.asarray(mask))
+        self.cache = new_cache
+        logits = np.asarray(logits)
+        for rid in ar_rids:
+            st = self._states[rid]
+            slot = self._slot_of[rid]
+            _, tok = softmax_confidence(logits[slot, 0])
+            st.commit(int(tok))
+            infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
+
+    def decode_step(self, rids, chunk: int):
+        infos: dict[int, StepInfo] = {}
+        ar_rids = [r for r in rids if isinstance(self._states[r], ARState)]
+        diff_rids = [r for r in rids if r not in set(ar_rids)]
+        if ar_rids:
+            if self.cfg.family == "ssm":
+                self._step_ar_recurrent(ar_rids, infos)
+            else:
+                self._step_ar(ar_rids, infos)
+        if not diff_rids:
+            return 0.0, infos
+
+        jnp = self.jnp
+        B = self.n_slots
+        c = chunk if self.cfg.family != "hybrid" else self.cfg.block_size
+        win = np.full((B, c), self.cfg.mask_token_id, np.int64)
+        start = np.zeros(B, np.int64)
+        valid = np.zeros(B, np.int64)
+        meta = {}
+        for rid in diff_rids:
+            st = self._states[rid]
+            slot = self._slot_of[rid]
+            toks, s, v, cai = st.window(c)
+            win[slot, :len(toks)] = toks
+            start[slot] = s
+            valid[slot] = v
+            meta[rid] = (cai, v)
+
+        logits, win_kv = self._chunk_fwd(
+            self.params, self.cache, jnp.asarray(win, jnp.int32),
+            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32))
+        logits = np.asarray(logits)
+
+        n_adv_arr = np.zeros(B, np.int64)
+        block_commits = []
+        for rid in diff_rids:
+            st = self._states[rid]
+            slot = self._slot_of[rid]
+            cai, v = meta[rid]
+            conf, tok = softmax_confidence(logits[slot, :c])
+            commit_mask, n_adv = st.apply_step(conf, tok, v, cai)
+            if st.mode == "block_pinned":
+                if n_adv > 0:
+                    block_commits.append((rid, slot, n_adv))
+            else:
+                n_adv_arr[slot] = n_adv
+                st.advance(n_adv)
+            infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask, v,
+                                  st.done)
+
+        if win_kv is not None and n_adv_arr.any():
+            self.cache = self._freeze(self.cache, win_kv,
+                                      jnp.asarray(start, jnp.int32),
+                                      jnp.asarray(n_adv_arr, jnp.int32))
+
+        for rid, slot, n_adv in block_commits:
+            st = self._states[rid]
+            rel0 = st.frozen
+            toks = np.full((B, n_adv), self.cfg.mask_token_id, np.int64)
+            lens = np.zeros(B, np.int64)
+            mask = np.zeros(B, bool)
+            toks[slot] = st.committed[rel0:rel0 + n_adv]
+            lens[slot] = n_adv
+            mask[slot] = True
+            old_states = self.cache.get("states")
+            _, new_cache = self._advance(self.params, self.cache,
+                                         jnp.asarray(toks, jnp.int32),
+                                         jnp.asarray(lens, jnp.int32))
+            if old_states is not None:
+                new_cache = dict(new_cache)
+                new_cache["states"] = self._merge(old_states,
+                                                  new_cache["states"],
+                                                  jnp.asarray(mask))
+            self.cache = new_cache
+            st.advance(n_adv)
+        return 0.0, infos

@@ -1,0 +1,74 @@
+"""Paged KV-cache allocator with block tables (vLLM-style, TPU-page sized).
+
+The allocator manages logical pages; tensor storage is owned by the backend
+(the Pallas chunked-paged-attention kernel consumes exactly this block-table
+layout).  Admission control queries ``can_admit`` so continuous batching
+never over-commits HBM.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class OutOfPages(Exception):
+    pass
+
+
+@dataclass
+class PagedKVAllocator:
+    n_pages: int
+    page_size: int = 16
+
+    _free: list = field(init=False)
+    _tables: dict = field(default_factory=dict, init=False)   # rid → [page,...]
+    _lens: dict = field(default_factory=dict, init=False)     # rid → tokens
+
+    def __post_init__(self):
+        self._free = list(range(self.n_pages - 1, -1, -1))
+
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= self.free_pages
+
+    # ------------------------------------------------------------------
+    def allocate(self, rid: int, n_tokens: int):
+        assert rid not in self._tables, rid
+        need = self.pages_for(n_tokens)
+        if need > len(self._free):
+            raise OutOfPages(f"need {need} pages, have {len(self._free)}")
+        self._tables[rid] = [self._free.pop() for _ in range(need)]
+        self._lens[rid] = n_tokens
+        return list(self._tables[rid])
+
+    def extend(self, rid: int, new_len: int):
+        """Grow a request's allocation to cover ``new_len`` tokens."""
+        table = self._tables[rid]
+        need = self.pages_for(new_len) - len(table)
+        if need > len(self._free):
+            raise OutOfPages(f"extend needs {need}, have {len(self._free)}")
+        for _ in range(max(need, 0)):
+            table.append(self._free.pop())
+        self._lens[rid] = new_len
+        return list(table)
+
+    def free(self, rid: int):
+        self._free.extend(reversed(self._tables.pop(rid)))
+        self._lens.pop(rid)
+
+    def block_table(self, rid: int) -> list[int]:
+        return list(self._tables[rid])
+
+    def length(self, rid: int) -> int:
+        return self._lens[rid]
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self._free) / self.n_pages

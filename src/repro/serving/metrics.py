@@ -1,0 +1,39 @@
+"""Serving-level aggregate metrics: SLO capacity search, distributions."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def slo_capacity(run_at_rate, rates, slo_tpot: float, percentile: float = 90.0):
+    """Max request rate whose P<percentile> TPOT meets the SLO (paper §7.4).
+
+    ``run_at_rate(rate) -> EngineReport``.  Returns (capacity, curve) where
+    curve = [(rate, p_tpot), ...] for plotting Fig. 10-style results.
+    """
+    curve = []
+    capacity = 0.0
+    for rate in rates:
+        rep = run_at_rate(rate)
+        p = rep.tpot_percentile(percentile)
+        curve.append((rate, p, rep.throughput))
+        if p <= slo_tpot:
+            capacity = rate
+    return capacity, curve
+
+
+def chunk_distribution(report):
+    """Fig. 11-style runtime distributions."""
+    chunks = np.array([c for _, _, c in report.chunk_history], float)
+    batches = np.array(report.batch_history, float)
+    if len(chunks) == 0:
+        return {}
+    return {
+        "chunk_mean": float(chunks.mean()),
+        "chunk_median": float(np.median(chunks)),
+        "chunk_min": float(chunks.min()),
+        "chunk_max": float(chunks.max()),
+        "batch_mean": float(batches.mean()),
+        "batch_median": float(np.median(batches)),
+        "batch_max": float(batches.max()),
+    }

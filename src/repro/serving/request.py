@@ -1,0 +1,47 @@
+"""Request and per-request metrics types."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival_time: float
+    prompt_len: int
+    max_new_tokens: int
+    prompt_tokens: list | None = None      # real-model path
+    eos_token: int | None = None
+    dataset: str = "synthetic"
+
+
+@dataclass
+class RequestMetrics:
+    rid: int
+    arrival_time: float
+    admit_time: float = -1.0
+    first_token_time: float = -1.0
+    finish_time: float = -1.0
+    n_tokens: int = 0
+    computed_tokens: int = 0
+    decode_steps: int = 0
+
+    @property
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def tpot(self) -> float:
+        """Time per output token after the first (paper's TPOT metric)."""
+        if self.n_tokens <= 1:
+            return self.finish_time - self.first_token_time
+        return (self.finish_time - self.first_token_time) / (self.n_tokens - 1)
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @property
+    def token_utilization(self) -> float:
+        return self.n_tokens / max(self.computed_tokens, 1)

@@ -1,0 +1,158 @@
+"""Workload generation: Poisson arrivals + paper Table-2 dataset profiles,
+and the calibrated commit simulator that drives the virtual-clock backend.
+
+Commit model.  Diffusion confidence is front-loaded: positions near the
+committed frontier commit with higher probability than deep-suffix positions
+(this is why ``N_commit(c)`` has diminishing returns, paper Fig. 5b).  We use
+a per-position geometric profile  p(depth) = p0 · γ^depth  and calibrate p0
+so that the expected commits for a full 32-window match the dataset's
+measured BD32 tokens/step (Table 2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclass(frozen=True)
+class DatasetProfile:
+    """Paper Table 2 row."""
+    name: str
+    input_mean: float
+    input_std: float
+    output_mean: float
+    output_std: float
+    tokens_per_step_bd32: float      # SDAR-8B column
+    tokens_per_step_std: float
+
+
+# Table 2 of the paper (SDAR-8B tokens/step column).
+DATASETS = {
+    "sharegpt":   DatasetProfile("sharegpt",   213, 508, 321, 214, 5.29, 9.44),
+    "lmsys-chat": DatasetProfile("lmsys-chat",  89, 133, 183, 163, 4.81, 8.80),
+    "longbench":  DatasetProfile("longbench", 4015, 2057, 116, 138, 6.06, 10.74),
+    "gsm8k":      DatasetProfile("gsm8k",       89,  22, 175,  67, 3.20, 5.68),
+    "humaneval":  DatasetProfile("humaneval",  172,  65, 103,  62, 3.75, 5.96),
+    "mbpp":       DatasetProfile("mbpp",       155,  77,  49,  28, 1.96, 3.33),
+    "ifeval":     DatasetProfile("ifeval",      58,  24, 281, 264, 1.88, 3.90),
+}
+
+
+class CommitSimulator:
+    """Samples per-step commit outcomes with a front-loaded geometric profile.
+
+    ``confidences(depths)`` returns pseudo-confidence values compatible with
+    :func:`repro.core.diffusion.commit_decisions`: committed positions get a
+    confidence above the threshold, others below it.
+    """
+
+    def __init__(self, tokens_per_step: float, gamma: float = 0.95,
+                 block_size: int = 32, threshold: float = 0.9,
+                 seed: int = 0):
+        self.gamma = gamma
+        self.threshold = threshold
+        self.block_size = block_size
+        # Closed-loop calibration: Table 2 reports *realized* tokens/step of
+        # standard BD-32 decoding, where already-committed window slots are
+        # recomputed deadweight (each token is computed ≥2×).  Bisect p0 so
+        # the simulated steady-state block decode matches the target.
+        lo, hi = 1e-3, 1.0
+        for _ in range(18):
+            mid = 0.5 * (lo + hi)
+            if self._steady_tokens_per_step(mid, seed) < tokens_per_step:
+                lo = mid
+            else:
+                hi = mid
+        self.p0 = 0.5 * (lo + hi)
+        self.rng = np.random.default_rng(seed)
+
+    def _steady_tokens_per_step(self, p0: float, seed: int,
+                                n_blocks: int = 40) -> float:
+        """Realized tokens/step of reference BD-<block> decoding at p0."""
+        rng = np.random.default_rng(seed + 77)
+        bs = self.block_size
+        steps = 0
+        for _ in range(n_blocks):
+            committed = np.zeros(bs, bool)
+            while not committed.all():
+                frontier = int(np.argmin(committed))     # first uncommitted
+                depth = np.maximum(np.arange(bs) - frontier, 0)
+                p = np.minimum(1.0, p0 * self.gamma ** depth)
+                hit = (rng.random(bs) < p) & ~committed
+                if not hit.any():
+                    masked = np.where(~committed, p, -1)
+                    hit[int(masked.argmax())] = True     # progress guarantee
+                committed |= hit
+                steps += 1
+        return n_blocks * bs / max(steps, 1)
+
+    def p(self, depth):
+        return np.minimum(1.0, self.p0 * self.gamma ** np.asarray(depth))
+
+    def confidences(self, depths: np.ndarray) -> np.ndarray:
+        """depths: distance of each uncommitted window position from the
+        first-uncommitted frontier.  Returns pseudo-confidences in [0,1]."""
+        p = self.p(depths)
+        u = self.rng.random(len(depths))
+        hit = u < p
+        lo, hi = self.threshold, 1.0
+        conf = np.where(hit,
+                        lo + (hi - lo) * self.rng.random(len(depths)) + 1e-6,
+                        lo * self.rng.random(len(depths)))
+        return conf
+
+    def expected_commits(self, c: int) -> float:
+        """Per-step commit upper bound: all c window slots uncommitted."""
+        return float(self.p(np.arange(c)).sum())
+
+    def realized_tokens_per_step(self, seed: int = 123) -> float:
+        """Steady-state tokens/step of the reference BD-<block> decode
+        (the Table-2 quantity)."""
+        return self._steady_tokens_per_step(self.p0, seed)
+
+
+class PoissonWorkload:
+    """Open-loop Poisson arrival trace over a dataset profile."""
+
+    def __init__(self, profile: DatasetProfile, rate: float, n_requests: int,
+                 seed: int = 0, max_prompt: int = 8192, max_output: int = 2048):
+        self.profile = profile
+        self.rate = rate
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / rate, n_requests)
+        arrivals = np.cumsum(gaps)
+        self.requests = []
+        for i in range(n_requests):
+            p = int(np.clip(rng.normal(profile.input_mean, profile.input_std),
+                            8, max_prompt))
+            o = int(np.clip(rng.normal(profile.output_mean, profile.output_std),
+                            4, max_output))
+            self.requests.append(Request(
+                rid=i, arrival_time=float(arrivals[i]), prompt_len=p,
+                max_new_tokens=o, dataset=profile.name))
+
+    def __iter__(self):
+        return iter(self.requests)
+
+    def __len__(self):
+        return len(self.requests)
+
+
+def fixed_batch_workload(profile: DatasetProfile, batch: int, seed: int = 0,
+                         max_output: int = 2048):
+    """Closed-loop batch (all arrive at t=0) for throughput-vs-batch sweeps
+    (paper §7.3)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(batch):
+        p = int(np.clip(rng.normal(profile.input_mean, profile.input_std),
+                        8, 8192))
+        o = int(np.clip(rng.normal(profile.output_mean, profile.output_std),
+                        4, max_output))
+        reqs.append(Request(rid=i, arrival_time=0.0, prompt_len=p,
+                            max_new_tokens=o, dataset=profile.name))
+    return reqs

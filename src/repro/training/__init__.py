@@ -1,0 +1,17 @@
+from repro.training.checkpoint import CheckpointManager, restore, save
+from repro.training.data import DataConfig, SyntheticTokenStream
+from repro.training.fault_tolerance import (FailureInjector, SimulatedFailure,
+                                            StragglerMonitor,
+                                            elastic_shardings)
+from repro.training.objectives import (ar_loss, block_diffusion_loss,
+                                       encdec_loss, loss_for)
+from repro.training.optimizer import AdamW, AdamWConfig, cosine_schedule
+from repro.training.train_loop import Trainer, TrainerConfig, make_train_step
+
+__all__ = [
+    "CheckpointManager", "restore", "save", "DataConfig",
+    "SyntheticTokenStream", "FailureInjector", "SimulatedFailure",
+    "StragglerMonitor", "elastic_shardings", "ar_loss",
+    "block_diffusion_loss", "encdec_loss", "loss_for", "AdamW", "AdamWConfig",
+    "cosine_schedule", "Trainer", "TrainerConfig", "make_train_step",
+]

@@ -1,0 +1,153 @@
+"""Sharded, step-atomic checkpointing with resharding-agnostic restore.
+
+Layout::
+
+    <dir>/step_000123/
+        MANIFEST.json       # tree structure, shapes, dtypes, leaf→file map
+        leaf_00000.npy ...
+    <dir>/LATEST            # atomic pointer (written last)
+
+Leaves are written host-resident (device_get); on restore they are placed
+under whatever mesh/sharding the caller provides — checkpoints therefore
+survive elastic re-scaling (the new mesh just re-shards each logical array).
+A background thread makes saves non-blocking for the train loop.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# dtypes numpy cannot natively (de)serialize: stored as raw uint views
+_EXOTIC = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+           "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+           "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    paths, leaves, _ = _flatten_with_paths(tree)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = step_dir + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        dtype_name = str(arr.dtype)
+        if dtype_name in _EXOTIC:
+            arr = arr.view(_EXOTIC[dtype_name][0])
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"path": p, "file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": dtype_name})
+    with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp, step_dir)
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(step_dir))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return step_dir
+
+
+def latest_step(ckpt_dir: str):
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    return int(name.split("_")[-1])
+
+
+def restore(ckpt_dir: str, like_tree, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like_tree``; optional ``shardings``
+    pytree (same structure) re-shards each leaf for the current mesh."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(step_dir, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+    paths, leaves, treedef = _flatten_with_paths(like_tree)
+    shard_leaves = [None] * len(leaves)
+    if shardings is not None:
+        _, shard_leaves, _ = _flatten_with_paths(shardings)
+    out = []
+    for p, like, shd in zip(paths, leaves, shard_leaves):
+        entry = by_path[p]
+        arr = np.load(os.path.join(step_dir, entry["file"]))
+        if entry["dtype"] in _EXOTIC:
+            arr = arr.view(_EXOTIC[entry["dtype"]][1])
+        want_dtype = like.dtype
+        arr = arr.astype(want_dtype)
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class CheckpointManager:
+    """Rotating async checkpointer."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, async_save: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree):
+        # materialize on host synchronously (cheap), write async
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+
+        def work():
+            save(self.dir, step, host_tree)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[-1]) for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, like_tree, shardings=None):
+        self.wait()
+        return restore(self.dir, like_tree, shardings=shardings)
+
+    def latest_step(self):
+        return latest_step(self.dir)

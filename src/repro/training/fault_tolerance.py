@@ -1,0 +1,81 @@
+"""Fault-tolerance utilities for 1000+-node operation.
+
+* :class:`StragglerMonitor` — per-host step-time tracking with robust
+  outlier detection (median + MAD); flags hosts whose step times are
+  persistently slow so the cluster controller can evict/replace them.
+* :class:`ElasticPlan` — given a checkpoint and a *new* mesh (grown or
+  shrunk), produces the shardings to restore under; combined with the
+  resharding-agnostic checkpoint format this implements elastic re-scaling:
+  the global batch and data stream are functions of the step counter, so a
+  restart on a different topology is bitwise-consistent in expectation.
+* :class:`FailureInjector` — deterministic failure schedule for tests and
+  chaos drills (raise at step k, or with probability p per step).
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class StragglerMonitor:
+    def __init__(self, window: int = 32, threshold_mads: float = 6.0,
+                 min_samples: int = 8):
+        self.window = window
+        self.threshold = threshold_mads
+        self.min_samples = min_samples
+        self._times = defaultdict(lambda: deque(maxlen=window))
+
+    def record(self, host_id, step_time_s: float):
+        self._times[host_id].append(step_time_s)
+
+    def stragglers(self):
+        """Hosts whose median step time is an outlier vs the fleet."""
+        meds = {h: float(np.median(t)) for h, t in self._times.items()
+                if len(t) >= self.min_samples}
+        if len(meds) < 3:
+            return []
+        vals = np.array(list(meds.values()))
+        med = np.median(vals)
+        mad = np.median(np.abs(vals - med)) + 1e-9
+        return [h for h, v in meds.items()
+                if (v - med) / mad > self.threshold]
+
+    def fleet_p50(self):
+        vals = [t for dq in self._times.values() for t in dq]
+        return float(np.median(vals)) if vals else float("nan")
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule for restart drills."""
+    fail_at_steps: tuple = ()
+    fail_prob: float = 0.0
+    seed: int = 0
+    _rng: np.random.Generator = field(init=False, repr=False)
+    _fired: set = field(default_factory=set, init=False, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def check(self, step: int):
+        if step in self.fail_at_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+        if self.fail_prob > 0 and self._rng.random() < self.fail_prob:
+            raise SimulatedFailure(f"random failure at step {step}")
+
+
+class SimulatedFailure(RuntimeError):
+    pass
+
+
+def elastic_shardings(logical_axes_tree, rules):
+    """PartitionSpecs for restoring a checkpoint under a (possibly different)
+    mesh: logical axis names are topology-independent, so growing/shrinking
+    the mesh only changes the rules table."""
+    from repro.distributed.sharding import param_specs, use_rules
+    with use_rules(rules):
+        return param_specs(logical_axes_tree)

@@ -1,0 +1,88 @@
+"""Training objectives.
+
+* ``block_diffusion_loss`` — SDAR-style masked-denoising within blocks:
+  every block independently samples a mask ratio r ~ U(0,1], masked inputs
+  are replaced by the mask token, the model runs with the block-causal mask
+  and predicts the original token at masked positions, CE weighted 1/r
+  (standard discrete-diffusion ELBO weighting).
+* ``ar_loss`` — next-token cross entropy (the AR baselines and rwkv6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ce(logits, targets, weights):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    return jnp.sum(nll * weights) / denom
+
+
+def block_diffusion_loss(model, params, tokens, rng, *, lengths=None,
+                         mm_embeds=None, mm_mask=None):
+    cfg = model.cfg
+    B, T = tokens.shape
+    bs = cfg.block_size
+    n_blocks = -(-T // bs)
+    r_key, m_key = jax.random.split(rng)
+    # per-(example, block) mask ratio in (0, 1]
+    ratios = jax.random.uniform(r_key, (B, n_blocks), minval=1.0 / bs,
+                                maxval=1.0)
+    ratios_tok = jnp.repeat(ratios, bs, axis=1)[:, :T]
+    u = jax.random.uniform(m_key, (B, T))
+    masked = u < ratios_tok
+    inputs = jnp.where(masked, cfg.mask_token_id, tokens)
+    logits = model.apply(params, inputs, mask_mode="block_causal",
+                         lengths=lengths, mm_embeds=mm_embeds,
+                         mm_mask=mm_mask)
+    w = masked.astype(jnp.float32) / ratios_tok
+    if lengths is not None:
+        w = w * (jnp.arange(T)[None, :] < lengths[:, None])
+    return _ce(logits, tokens, w)
+
+
+def ar_loss(model, params, tokens, rng=None, *, lengths=None,
+            mm_embeds=None, mm_mask=None):
+    B, T = tokens.shape
+    logits = model.apply(params, tokens, mask_mode="causal", lengths=lengths,
+                         mm_embeds=mm_embeds, mm_mask=mm_mask)
+    w = jnp.ones((B, T - 1), jnp.float32)
+    if lengths is not None:
+        w = w * (jnp.arange(1, T)[None, :] < lengths[:, None])
+    return _ce(logits[:, :-1], tokens[:, 1:], w)
+
+
+def encdec_loss(model, params, batch, rng, *, diffusion=True):
+    """Seq2seq loss for the encoder-decoder family."""
+    cfg = model.cfg
+    src_embeds, src_mask = batch["src_embeds"], batch["src_mask"]
+    tgt = batch["tgt_tokens"]
+    B, T = tgt.shape
+    if diffusion and cfg.diffusion:
+        bs = cfg.block_size
+        n_blocks = -(-T // bs)
+        r_key, m_key = jax.random.split(rng)
+        ratios = jax.random.uniform(r_key, (B, n_blocks), minval=1.0 / bs,
+                                    maxval=1.0)
+        ratios_tok = jnp.repeat(ratios, bs, axis=1)[:, :T]
+        masked = jax.random.uniform(m_key, (B, T)) < ratios_tok
+        inputs = jnp.where(masked, cfg.mask_token_id, tgt)
+        logits = model.apply(params, src_embeds, src_mask, inputs,
+                             mask_mode="block_causal")
+        w = masked.astype(jnp.float32) / ratios_tok
+        return _ce(logits, tgt, w)
+    logits = model.apply(params, src_embeds, src_mask, tgt, mask_mode="causal")
+    w = jnp.ones((B, T - 1), jnp.float32)
+    return _ce(logits[:, :-1], tgt[:, 1:], w)
+
+
+def loss_for(cfg):
+    """Pick the training objective for an architecture."""
+    if cfg.family == "encdec":
+        return encdec_loss
+    if cfg.diffusion and cfg.family != "ssm":
+        return block_diffusion_loss
+    return ar_loss

@@ -1,0 +1,111 @@
+"""Optimizers in pure JAX: AdamW (optionally low-precision or factored
+second moment for trillion-parameter configs) + schedules + clipping."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"        # bfloat16 halves optimizer memory
+    factored: bool = False              # Adafactor-style factored v for ≥2D
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _is_factored(leaf, cfg):
+    return cfg.factored and leaf.ndim >= 2 and \
+        leaf.shape[-1] >= 128 and leaf.shape[-2] >= 128
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    def init(self, params):
+        dt = jnp.dtype(self.cfg.state_dtype)
+
+        def one(p):
+            m = jnp.zeros(p.shape, dt)
+            if _is_factored(p, self.cfg):
+                vr = jnp.zeros(p.shape[:-1], dt)        # row second moment
+                vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], dt)
+                return {"m": m, "vr": vr, "vc": vc}
+            return {"m": m, "v": jnp.zeros(p.shape, dt)}
+
+        return {"mu": jax.tree.map(one, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def init_abstract(self, params):
+        def shape_of(x):
+            return jax.eval_shape(lambda p: self.init({"x": p})["mu"]["x"], x)
+        return {"mu": jax.tree.map(shape_of, params),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    # ------------------------------------------------------------------
+    def update(self, grads, state, params):
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = cosine_schedule(cfg, step.astype(jnp.float32))
+
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(cfg.state_dtype)
+
+        def one(g, mu, p):
+            g = g.astype(jnp.float32) * scale
+            m = cfg.b1 * mu["m"].astype(jnp.float32) + (1 - cfg.b1) * g
+            if "v" in mu:
+                v = cfg.b2 * mu["v"].astype(jnp.float32) + (1 - cfg.b2) * g * g
+                denom = jnp.sqrt(v / bc2) + cfg.eps
+                new_mu = {"m": m.astype(dt), "v": v.astype(dt)}
+            else:
+                g2 = g * g
+                vr = cfg.b2 * mu["vr"].astype(jnp.float32) + \
+                    (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+                vc = cfg.b2 * mu["vc"].astype(jnp.float32) + \
+                    (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+                vhat = vr[..., None] * vc[..., None, :] / \
+                    jnp.maximum(jnp.mean(vr, axis=-1)[..., None, None], 1e-30)
+                denom = jnp.sqrt(vhat / bc2) + cfg.eps
+                new_mu = {"m": m.astype(dt), "vr": vr.astype(dt),
+                          "vc": vc.astype(dt)}
+            upd = (m / bc1) / denom + cfg.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, new_mu
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        out = [one(g, mu, p) for g, mu, p in zip(flat_g, flat_mu, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_mu = tdef.unflatten([o[1] for o in out])
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, {"mu": new_mu, "step": step}, metrics

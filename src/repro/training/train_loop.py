@@ -1,0 +1,135 @@
+"""Training loop: jit-compiled step with gradient accumulation, periodic
+async checkpoints, restart-from-latest, and straggler monitoring hooks.
+
+``make_train_step`` is also what the multi-pod dry-run lowers — it is the
+single source of truth for the training computation at every scale.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import build_model
+from repro.training import checkpoint as ckpt_lib
+from repro.training.data import DataConfig, SyntheticTokenStream
+from repro.training.fault_tolerance import StragglerMonitor
+from repro.training.objectives import loss_for
+from repro.training.optimizer import AdamW, AdamWConfig
+
+
+def make_train_step(model, optimizer, *, microbatches: int = 1,
+                    donate: bool = True):
+    """Build the jittable train step.
+
+    batch: {"tokens": [B, T]} (+ modality extras).  With ``microbatches>1``
+    the global batch is split and gradients accumulated in a scan (memory
+    for the 1T configs)."""
+    loss_fn = loss_for(model.cfg)
+
+    def compute_loss(params, batch, rng):
+        if model.cfg.family == "encdec":
+            return loss_fn(model, params, batch, rng)
+        extras = {k: batch[k] for k in ("mm_embeds", "mm_mask")
+                  if k in batch}
+        return loss_fn(model, params, batch["tokens"], rng,
+                       lengths=batch.get("lengths"), **extras)
+
+    def step(params, opt_state, batch, rng):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(compute_loss)(params, batch, rng)
+        else:
+            def split(x):
+                return x.reshape((microbatches, -1) + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+            rngs = jax.random.split(rng, microbatches)
+
+            def acc_fn(carry, inp):
+                mb_i, rng_i = inp
+                l, g = jax.value_and_grad(compute_loss)(params, mb_i, rng_i)
+                loss_acc, grads_acc = carry
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grads_acc, g)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zero), (mb, rngs))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_opt, metrics = optimizer.update(grads, opt_state,
+                                                        params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    microbatches: int = 1
+    seed: int = 0
+
+
+class Trainer:
+    """Single-controller trainer with checkpoint/restart."""
+
+    def __init__(self, arch_cfg, data_cfg: DataConfig,
+                 opt_cfg: AdamWConfig | None = None,
+                 trainer_cfg: TrainerConfig | None = None,
+                 failure_injector=None):
+        self.arch_cfg = arch_cfg
+        self.model = build_model(arch_cfg)
+        self.opt = AdamW(opt_cfg or AdamWConfig())
+        self.tc = trainer_cfg or TrainerConfig()
+        self.data = SyntheticTokenStream(data_cfg)
+        self.ckpt = ckpt_lib.CheckpointManager(self.tc.ckpt_dir)
+        self.monitor = StragglerMonitor()
+        self.failure_injector = failure_injector
+        self._step_fn = jax.jit(make_train_step(
+            self.model, self.opt, microbatches=self.tc.microbatches))
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        params = self.model.init(jax.random.PRNGKey(self.arch_cfg.name.__hash__() % 2**31))
+        return {"params": params, "opt": self.opt.init(params),
+                "step": 0}
+
+    def run(self, resume: bool = True):
+        state = self.init_state()
+        start = 0
+        if resume and self.ckpt.latest_step() is not None:
+            restored, start = self.ckpt.restore_latest(
+                {"params": state["params"], "opt": state["opt"]})
+            state["params"], state["opt"] = restored["params"], restored["opt"]
+        losses = []
+        for step in range(start, self.tc.total_steps):
+            if self.failure_injector is not None:
+                self.failure_injector.check(step)
+            batch = {"tokens": jnp.asarray(self.data.batch(step))}
+            rng = jax.random.fold_in(jax.random.PRNGKey(self.tc.seed), step)
+            t0 = time.perf_counter()
+            state["params"], state["opt"], metrics = self._step_fn(
+                state["params"], state["opt"], batch, rng)
+            loss = float(metrics["loss"])
+            self.monitor.record(0, time.perf_counter() - t0)
+            losses.append(loss)
+            if (step + 1) % self.tc.ckpt_every == 0 or \
+                    step + 1 == self.tc.total_steps:
+                self.ckpt.save(step + 1,
+                               {"params": state["params"],
+                                "opt": state["opt"]})
+            if (step + 1) % self.tc.log_every == 0:
+                print(f"step {step+1}: loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f}")
+        self.ckpt.wait()
+        return losses

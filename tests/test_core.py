@@ -1,0 +1,224 @@
+"""Unit tests for the paper's core: commit rule, chunked state machine,
+latency model, TU estimator, elastic scheduler."""
+
+import numpy as np
+import pytest
+
+from repro.core import (A100_80G, TPU_V5E, AnalyticDeviceModel,
+                        ChunkedDecodeState, ElasticScheduler, FixedScheduler,
+                        PiecewiseAffineLatencyModel, TokenUtilEstimator,
+                        block_decode_reference, commit_decisions)
+from repro.models.common import ArchConfig
+
+CFG8B = ArchConfig(name="sdar8b", family="dense", n_layers=36, d_model=4096,
+                   n_heads=32, n_kv_heads=8, d_ff=12288, vocab_size=151936,
+                   block_size=32)
+
+
+# ---------------------------------------------------------------------------
+# commit rule
+# ---------------------------------------------------------------------------
+
+def test_commit_threshold():
+    conf = np.array([0.95, 0.5, 0.91, 0.2])
+    unc = np.array([True, True, True, True])
+    c = commit_decisions(conf, unc, 0.9)
+    assert c.tolist() == [True, False, True, False]
+
+
+def test_commit_progress_guarantee():
+    conf = np.array([0.1, 0.4, 0.3])
+    c = commit_decisions(conf, np.ones(3, bool), 0.9)
+    assert c.sum() == 1 and c[1]          # highest-confidence forced
+
+
+def test_commit_respects_committed():
+    conf = np.array([0.99, 0.99])
+    c = commit_decisions(conf, np.array([False, True]), 0.9)
+    assert c.tolist() == [False, True]
+
+
+# ---------------------------------------------------------------------------
+# chunked decode state machine
+# ---------------------------------------------------------------------------
+
+def _drive(st: ChunkedDecodeState, chunk, conf_fn, max_steps=10_000):
+    steps = 0
+    while not st.done:
+        toks, start, valid, cai = st.window(chunk)
+        assert valid > 0, "stuck"
+        conf = conf_fn(len(toks))
+        tok = np.arange(len(toks)) + 100
+        _, n_adv = st.apply_step(conf, tok, valid, cai)
+        st.advance(n_adv)
+        steps += 1
+        assert steps < max_steps
+    return st
+
+
+def test_chunked_all_commit_first_try():
+    st = ChunkedDecodeState(prompt_len=10, max_new_tokens=32, block_size=8,
+                            threshold=0.9, mask_token=3)
+    _drive(st, 8, lambda n: np.full(n, 0.99))
+    assert st.n_committed == 32
+    # every position committed with real value
+    assert all(t >= 0 for t in st.output_tokens)
+    # TU: each token computed ≥2× only when it must freeze; last window may
+    # commit without recompute.  With always-commit: steps = blocks*2-ish
+    assert 0.25 <= st.token_utilization <= 1.0
+
+
+def test_chunked_low_confidence_progress():
+    st = ChunkedDecodeState(prompt_len=0, max_new_tokens=16, block_size=8,
+                            threshold=0.9, mask_token=3)
+    _drive(st, 4, lambda n: np.full(n, 0.1))     # forced one-by-one
+    assert st.n_committed == 16
+
+
+def test_window_inblock_clamp():
+    st = ChunkedDecodeState(prompt_len=5, max_new_tokens=32, block_size=8,
+                            threshold=0.9, mask_token=3)
+    toks, start, valid, cai = st.window(32)
+    # window starts at abs 5, block ends at 8 → only 3 valid slots
+    assert start == 5 and valid == 3
+
+
+def test_window_obs_crosses_blocks():
+    st = ChunkedDecodeState(prompt_len=5, max_new_tokens=32, block_size=8,
+                            threshold=0.9, mask_token=3, obs=True)
+    _, start, valid, _ = st.window(32)
+    assert start == 5 and valid == 32
+
+
+def test_eos_truncates():
+    st = ChunkedDecodeState(prompt_len=0, max_new_tokens=32, block_size=8,
+                            threshold=0.9, mask_token=3, eos_token=100)
+    # first window: commit position 0 with token 100 (eos)
+    toks, start, valid, cai = st.window(8)
+    conf = np.zeros(8)
+    conf[0] = 0.99
+    st.apply_step(conf, np.full(8, 100), valid, cai)
+    assert st.gen_limit == 1 and st.done
+
+
+def test_block_pinned_advances_whole_blocks():
+    st = ChunkedDecodeState(prompt_len=0, max_new_tokens=16, block_size=8,
+                            threshold=0.9, mask_token=3, mode="block_pinned")
+    toks, start, valid, cai = st.window(4)      # chunk ignored
+    assert valid == 8
+    _, n_adv = st.apply_step(np.full(8, 0.99), np.arange(8), valid, cai)
+    assert n_adv == 8                            # whole block at once
+    st.advance(n_adv)
+    assert st.frozen == 8
+
+
+# ---------------------------------------------------------------------------
+# reference block decode
+# ---------------------------------------------------------------------------
+
+def test_block_decode_reference_tu():
+    rng = np.random.default_rng(0)
+
+    def step_fn(tokens, pos, committed):
+        conf = np.where(rng.random(len(tokens)) < 0.3, 0.95, 0.1)
+        return conf, rng.integers(10, 90, len(tokens))
+
+    tr = block_decode_reference(step_fn, prompt_len=10, gen_len=64,
+                                block_size=32, threshold=0.9, mask_token=3)
+    assert len(tr.tokens) == 64
+    assert 0 < tr.token_utilization <= 1
+    assert tr.tokens_per_step > 1.0              # parallel commits happened
+
+
+# ---------------------------------------------------------------------------
+# latency model
+# ---------------------------------------------------------------------------
+
+def test_analytic_three_regimes():
+    am = AnalyticDeviceModel(CFG8B, A100_80G)
+    lat = [am.step_latency(bc, 1, 1024) for bc in (1, 64, 4096)]
+    # plateau then growth
+    assert lat[1] < 1.6 * lat[0]
+    assert lat[2] > 5 * lat[1]
+    ew = am.saturation_ew(1024)
+    assert 50 < ew < 2000
+
+
+def test_piecewise_fit_accuracy():
+    am = AnalyticDeviceModel(CFG8B, TPU_V5E)
+    samples = [(b, c, am.step_latency(b, c, 1024))
+               for b in [1, 2, 4, 8, 16, 32, 64, 128, 256]
+               for c in [1, 2, 4, 8, 16, 32]]
+    pw = PiecewiseAffineLatencyModel.fit(samples)
+    rel = [abs(pw.predict(b, c) - t) / t for b, c, t in samples]
+    assert np.mean(rel) < 0.15
+    # monotone in bc across regimes (physical sanity)
+    xs = [pw.predict_bc(bc) for bc in (1, 16, 128, 1024, 8192)]
+    assert all(b >= 0.7 * a for a, b in zip(xs, xs[1:]))
+
+
+# ---------------------------------------------------------------------------
+# TU estimator
+# ---------------------------------------------------------------------------
+
+def test_tu_prefix_updates():
+    tu = TokenUtilEstimator([2, 4, 8, 16, 32], ema=0.5)
+    rng = np.random.default_rng(1)
+    gamma, p0 = 0.9, 0.5
+    for _ in range(500):
+        mask = rng.random(32) < p0 * gamma ** np.arange(32)
+        tu.update(mask, 32)
+    for c in [2, 4, 8, 16, 32]:
+        want = (p0 * gamma ** np.arange(c)).sum()
+        got = tu.estimate(c)
+        assert abs(got - want) / want < 0.25, (c, got, want)
+
+
+def test_tu_bounds_and_isotonic():
+    tu = TokenUtilEstimator([2, 4, 8, 16, 32])
+    est = [tu.estimate(c) for c in (2, 4, 8, 16, 32)]
+    assert all(0 < e <= c for e, c in zip(est, (2, 4, 8, 16, 32)))
+    assert all(b >= a for a, b in zip(est, est[1:]))
+
+
+# ---------------------------------------------------------------------------
+# elastic scheduler
+# ---------------------------------------------------------------------------
+
+def _front_loaded_tu(p0=0.25, gamma=0.95):
+    tu = TokenUtilEstimator([2, 4, 8, 16, 32], ema=0.2)
+    rng = np.random.default_rng(2)
+    for _ in range(400):
+        mask = rng.random(32) < p0 * gamma ** np.arange(32)
+        tu.update(mask, 32)
+    return tu
+
+
+def test_scheduler_tracks_saturation_frontier():
+    """Paper Fig. 8/11: large chunks at low load, small chunks at high load."""
+    am = AnalyticDeviceModel(CFG8B, A100_80G)
+    samples = [(b, c, am.step_latency(b, c, 512))
+               for b in [1, 2, 4, 8, 16, 32, 64, 128, 256]
+               for c in [1, 2, 4, 8, 16, 32]]
+    pw = PiecewiseAffineLatencyModel.fit(samples)
+    sch = ElasticScheduler(pw, _front_loaded_tu(), hysteresis=0.0)
+    low = sch.select(1)
+    high = sch.select(256)
+    assert low >= 16, low
+    assert high <= 8, high
+    assert sch.select(1) >= sch.select(64) >= high
+
+
+def test_scheduler_hysteresis_stability():
+    am = AnalyticDeviceModel(CFG8B, A100_80G)
+    samples = [(b, c, am.step_latency(b, c, 512))
+               for b in [1, 4, 16, 64, 256] for c in [2, 8, 32]]
+    pw = PiecewiseAffineLatencyModel.fit(samples)
+    sch = ElasticScheduler(pw, _front_loaded_tu(), hysteresis=0.1)
+    picks = {sch.select(32) for _ in range(20)}
+    assert len(picks) == 1                       # no oscillation at fixed b
+
+
+def test_fixed_scheduler():
+    s = FixedScheduler(8)
+    assert s.select(1) == 8 and s.select(999) == 8

@@ -1,0 +1,204 @@
+"""Serving-engine integration tests: conservation, elasticity, and the
+real-model backend end-to-end."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ElasticScheduler, FixedScheduler
+from repro.core.latency_model import A100_80G
+from repro.models import ArchConfig, build_model
+from repro.serving import (DATASETS, ModelBackend, PoissonWorkload,
+                           ServingEngine, SimBackend, fixed_batch_workload)
+
+CFG = ArchConfig(name="sim8b", family="dense", n_layers=36, d_model=4096,
+                 n_heads=32, n_kv_heads=8, d_ff=12288, vocab_size=151936,
+                 block_size=32)
+PROF = DATASETS["sharegpt"]
+
+
+def _engine(mode, chunk=None, seed=0, include_prefill=False, obs=False):
+    be = SimBackend(CFG, A100_80G, tokens_per_step=PROF.tokens_per_step_bd32,
+                    decode_mode="ar" if mode == "ar" else "elastic",
+                    seed=seed, include_prefill=include_prefill, obs=obs)
+    if mode == "elastic":
+        samples = [(b, c, be.analytic.step_latency(b, c, 512))
+                   for b in [1, 2, 4, 8, 16, 32, 64, 128, 256]
+                   for c in [1, 2, 4, 8, 16, 32]]
+        sch = ElasticScheduler.from_profile(
+            samples, prior_tokens_per_step=PROF.tokens_per_step_bd32)
+    else:
+        sch = FixedScheduler(1 if mode == "ar" else chunk)
+    return ServingEngine(be, sch, max_batch=256)
+
+
+# ---------------------------------------------------------------------------
+# conservation + accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,chunk", [("ar", None), ("fixed", 8),
+                                        ("fixed", 32), ("elastic", None)])
+def test_all_requests_complete(mode, chunk):
+    reqs = list(PoissonWorkload(PROF, rate=2.0, n_requests=25, seed=3))
+    rep = _engine(mode, chunk).run(reqs)
+    assert len(rep.metrics) == 25
+    for m in rep.metrics:
+        assert m.finish_time >= m.first_token_time >= 0
+        assert m.n_tokens > 0
+        assert m.computed_tokens >= m.n_tokens
+    want = {r.rid: r.max_new_tokens for r in reqs}
+    got = {m.rid: m.n_tokens for m in rep.metrics}
+    assert got == want                       # every token materialized
+    # KV pool fully drained
+    assert _engine(mode, chunk).backend.kv.free_pages  # fresh pool sanity
+
+
+def test_ar_token_utilization_is_one():
+    reqs = fixed_batch_workload(PROF, 8, seed=1)
+    rep = _engine("ar").run(reqs)
+    assert rep.token_utilization == 1.0
+
+
+def test_bd32_token_utilization_matches_calibration():
+    """TU of fixed BD32 should be ≈ tokens_per_step/32 (paper: 3.8/32≈12%;
+    sharegpt calibration is 5.29/32)."""
+    reqs = fixed_batch_workload(PROF, 8, seed=2)
+    rep = _engine("fixed", 32).run(reqs)
+    want = PROF.tokens_per_step_bd32 / 32
+    assert 0.4 * want < rep.token_utilization < 2.5 * want
+
+
+# ---------------------------------------------------------------------------
+# the paper's load-sensitivity claims (Fig. 1 / Fig. 8)
+# ---------------------------------------------------------------------------
+
+def _throughput(mode, chunk, batch, seed=7):
+    reqs = fixed_batch_workload(PROF, batch, seed=seed)
+    return _engine(mode, chunk, seed=seed).run(reqs).throughput
+
+
+def test_bd32_beats_ar_at_low_load():
+    assert _throughput("fixed", 32, 1) > 1.5 * _throughput("ar", None, 1)
+
+
+def test_ar_beats_bd32_at_high_load():
+    assert _throughput("ar", None, 256) > _throughput("fixed", 32, 256)
+
+
+def test_bd8_crosses_bd32_under_load():
+    lo32, lo8 = _throughput("fixed", 32, 2), _throughput("fixed", 8, 2)
+    hi32, hi8 = _throughput("fixed", 32, 128), _throughput("fixed", 8, 128)
+    assert lo32 > lo8            # large blocks win under-loaded
+    assert hi8 > hi32            # small chunks win saturated
+
+
+def test_elastic_tracks_best_fixed():
+    """Optimus ≥ ~90% of the best fixed config at every load (Fig. 8)."""
+    for batch in (1, 16, 128):
+        best_fixed = max(_throughput("fixed", c, batch) for c in (2, 8, 32))
+        el = _throughput("elastic", None, batch)
+        assert el >= 0.85 * best_fixed, (batch, el, best_fixed)
+
+
+def test_elastic_chunks_shrink_with_load():
+    lo = _engine("elastic")
+    rep_lo = lo.run(fixed_batch_workload(PROF, 1, seed=9))
+    hi = _engine("elastic")
+    rep_hi = hi.run(fixed_batch_workload(PROF, 192, seed=9))
+    mean_lo = np.mean([c for _, _, c in rep_lo.chunk_history])
+    mean_hi = np.mean([c for _, _, c in rep_hi.chunk_history])
+    assert mean_lo > mean_hi
+
+
+# ---------------------------------------------------------------------------
+# real-model backend end-to-end
+# ---------------------------------------------------------------------------
+
+def _tiny_requests(cfg, n, seed=0, prompt=12, out=16):
+    rng = np.random.default_rng(seed)
+    reqs = list(PoissonWorkload(PROF, 50.0, n, seed=seed))
+    for r in reqs:
+        r.prompt_len = prompt
+        r.max_new_tokens = out
+        r.prompt_tokens = rng.integers(4, cfg.vocab_size, prompt).tolist()
+    return reqs
+
+
+@pytest.mark.parametrize("mode", ["elastic", "ar"])
+def test_model_backend_dense(mode):
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                     block_size=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    be = ModelBackend(model, params, n_slots=4, max_len=64,
+                      decode_mode=mode)
+    sch = FixedScheduler(1 if mode == "ar" else 8)
+    eng = ServingEngine(be, sch, max_batch=4)
+    reqs = _tiny_requests(cfg, 5)
+    rep = eng.run(reqs)
+    assert len(rep.metrics) == 5
+    assert all(m.n_tokens == 16 for m in rep.metrics)
+    if mode == "ar":
+        assert rep.token_utilization == 1.0
+
+
+def test_model_backend_ar_matches_teacher_forcing():
+    """AR engine decode must equal greedy teacher-forced argmax."""
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                     block_size=8, diffusion=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    be = ModelBackend(model, params, n_slots=2, max_len=64, decode_mode="ar")
+    eng = ServingEngine(be, FixedScheduler(1), max_batch=2)
+    reqs = _tiny_requests(cfg, 1, seed=4, prompt=10, out=8)
+    rep = eng.run(reqs)
+    got = None
+    # replay greedily with full forwards
+    import jax.numpy as jnp
+    toks = list(reqs[0].prompt_tokens)
+    for _ in range(8):
+        logits = model.apply(params, jnp.asarray([toks]), mask_mode="causal")
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    # recover engine output
+    # (engine released state; rerun backend directly)
+    be2 = ModelBackend(model, params, n_slots=2, max_len=64, decode_mode="ar")
+    eng2 = ServingEngine(be2, FixedScheduler(1), max_batch=2)
+    reqs2 = _tiny_requests(cfg, 1, seed=4, prompt=10, out=8)
+    outs = {}
+    orig_release = be2.release
+
+    def spy_release(rid):
+        outs[rid] = be2.state(rid).output_tokens
+        orig_release(rid)
+
+    be2.release = spy_release
+    eng2.run(reqs2)
+    assert outs[0] == toks[10:]
+
+
+def test_model_backend_hybrid_block_commit():
+    cfg = ArchConfig(name="h", family="hybrid", n_layers=4, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                     attn_period=4, attn_offset=1, block_size=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    be = ModelBackend(model, params, n_slots=2, max_len=64,
+                      decode_mode="elastic")
+    eng = ServingEngine(be, FixedScheduler(8), max_batch=2)
+    rep = eng.run(_tiny_requests(cfg, 2, seed=5, prompt=8, out=16))
+    assert all(m.n_tokens == 16 for m in rep.metrics)
+
+
+def test_model_backend_rwkv_ar():
+    cfg = ArchConfig(name="r", family="ssm", n_layers=2, d_model=64,
+                     rwkv_head_dim=16, d_ff=128, vocab_size=256,
+                     diffusion=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    be = ModelBackend(model, params, n_slots=2, max_len=64, decode_mode="ar")
+    eng = ServingEngine(be, FixedScheduler(1), max_batch=2)
+    rep = eng.run(_tiny_requests(cfg, 2, seed=6, prompt=8, out=8))
+    assert all(m.n_tokens == 8 for m in rep.metrics)
+    assert rep.token_utilization == 1.0

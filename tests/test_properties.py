@@ -1,0 +1,159 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.chunked import ChunkedDecodeState
+from repro.core.diffusion import commit_decisions
+from repro.core.latency_model import PiecewiseAffineLatencyModel
+from repro.core.tu_model import TokenUtilEstimator
+from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
+
+# ---------------------------------------------------------------------------
+# commit rule
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0, 1), min_size=1, max_size=64),
+       st.lists(st.booleans(), min_size=1, max_size=64),
+       st.floats(0.1, 0.99))
+@settings(max_examples=200, deadline=None)
+def test_commit_decisions_invariants(confs, uncs, thr):
+    n = min(len(confs), len(uncs))
+    conf = np.array(confs[:n])
+    unc = np.array(uncs[:n])
+    c = commit_decisions(conf, unc, thr)
+    # never commit already-committed positions
+    assert not np.any(c & ~unc)
+    # progress: if anything is uncommitted, at least one commit
+    if unc.any():
+        assert c.any()
+    # only sub-threshold commits allowed is the single forced argmax
+    below = c & (conf <= thr)
+    assert below.sum() <= 1
+
+
+# ---------------------------------------------------------------------------
+# chunked decode state machine under adversarial commit sequences
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 37), st.integers(1, 64), st.sampled_from([4, 8, 16, 32]),
+       st.sampled_from([1, 2, 4, 8, 16, 32]), st.booleans(),
+       st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_chunked_state_machine_terminates_and_is_consistent(
+        prompt, gen, bs, chunk, obs, rnd):
+    st_ = ChunkedDecodeState(prompt_len=prompt, max_new_tokens=gen,
+                             block_size=bs, threshold=0.9, mask_token=3,
+                             obs=obs)
+    steps = 0
+    frozen_hist = [st_.frozen]
+    while not st_.done:
+        toks, start, valid, cai = st_.window(chunk)
+        # invariant: window anchored at first unfrozen position
+        assert start == prompt + st_.frozen
+        assert 1 <= valid <= len(toks)
+        conf = np.array([0.95 if rnd.random() < 0.5 else 0.1
+                         for _ in range(len(toks))])
+        tok = np.arange(len(toks)) + 10
+        _, n_adv = st_.apply_step(conf, tok, valid, cai)
+        st_.advance(n_adv)
+        # frozen never exceeds committed, never retreats
+        assert st_.frozen >= frozen_hist[-1]
+        assert st_.frozen <= st_.n_committed
+        frozen_hist.append(st_.frozen)
+        steps += 1
+        assert steps <= 20 * gen + 50, "did not terminate"
+    # all tokens materialized
+    assert st_.n_committed == st_.gen_limit
+    assert all(t >= 0 for t in st_.output_tokens)
+    # computed-token accounting is an upper bound of commits
+    assert st_.computed_tokens >= st_.gen_limit
+
+
+# ---------------------------------------------------------------------------
+# paged KV allocator
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(1, 400), st.booleans()),
+                min_size=1, max_size=60))
+@settings(max_examples=100, deadline=None)
+def test_kv_pool_invariants(ops):
+    pool = PagedKVAllocator(n_pages=64, page_size=16)
+    live = {}
+    rid = 0
+    for n_tokens, do_free in ops:
+        if do_free and live:
+            victim = next(iter(live))
+            pool.free(victim)
+            del live[victim]
+        else:
+            need = pool.pages_for(n_tokens)
+            if need <= pool.free_pages:
+                pages = pool.allocate(rid, n_tokens)
+                assert len(pages) == need
+                live[rid] = set(pages)
+                rid += 1
+            else:
+                try:
+                    pool.allocate(rid, n_tokens)
+                    raise AssertionError("expected OutOfPages")
+                except OutOfPages:
+                    pass
+                rid += 1
+                continue
+        # no page is owned twice
+        owned = [p for s in live.values() for p in s]
+        assert len(owned) == len(set(owned))
+        assert len(owned) + pool.free_pages == 64
+        assert 0 <= pool.utilization <= 1
+    for r in list(live):
+        pool.free(r)
+    assert pool.free_pages == 64
+
+
+@given(st.integers(1, 200), st.integers(1, 400))
+@settings(max_examples=100, deadline=None)
+def test_kv_pool_extend(first, second):
+    pool = PagedKVAllocator(n_pages=1000, page_size=16)
+    pool.allocate(0, first)
+    before = set(pool.block_table(0))
+    pool.extend(0, max(first, second))
+    after = pool.block_table(0)
+    # extension preserves the prefix pages in order
+    assert after[:len(before)] == list(pool.block_table(0))[:len(before)]
+    assert len(after) == pool.pages_for(max(first, second))
+
+
+# ---------------------------------------------------------------------------
+# latency model and TU estimator
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(1, 256), st.integers(1, 32)),
+                min_size=6, max_size=30, unique=True))
+@settings(max_examples=50, deadline=None)
+def test_piecewise_fit_never_negative(points):
+    samples = [(b, c, 1e-3 + 1e-6 * b * c + (1e-7 * (b * c) ** 1.1))
+               for b, c in points]
+    pw = PiecewiseAffineLatencyModel.fit(samples)
+    for b, c, _ in samples:
+        assert pw.predict(b, c) > 0
+
+
+@given(st.lists(st.lists(st.booleans(), min_size=32, max_size=32),
+                min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_tu_estimator_bounds(masks):
+    tu = TokenUtilEstimator([2, 4, 8, 16, 32])
+    for m in masks:
+        tu.update(np.array(m), 32)
+    prev = 0.0
+    for c in (2, 4, 8, 16, 32):
+        e = tu.estimate(c)
+        assert 0 < e <= c + 1e-9
+        assert e >= prev - 1e-9          # isotonic
+        prev = e

@@ -1,0 +1,146 @@
+"""Training substrate tests: objectives, optimizer, checkpoint/restart
+determinism, grad-accumulation equivalence, fault-tolerance utilities."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ArchConfig, build_model
+from repro.training import (AdamW, AdamWConfig, CheckpointManager, DataConfig,
+                            FailureInjector, SimulatedFailure,
+                            StragglerMonitor, SyntheticTokenStream, Trainer,
+                            TrainerConfig, make_train_step)
+
+CFG = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                 block_size=8)
+
+
+def test_loss_decreases():
+    dc = DataConfig(vocab_size=256, seq_len=32, global_batch=8)
+    d = "/tmp/repro_test_ckpt_a"
+    shutil.rmtree(d, ignore_errors=True)
+    tr = Trainer(CFG, dc, AdamWConfig(lr=1e-3, warmup_steps=3, total_steps=25),
+                 TrainerConfig(total_steps=25, ckpt_every=100, ckpt_dir=d,
+                               log_every=100))
+    losses = tr.run(resume=False)
+    assert losses[-1] < losses[0]
+
+
+def test_restart_is_deterministic():
+    """Failure at step 15, restart from ckpt@10 → same final loss as an
+    uninterrupted run (deterministic data + state restore)."""
+    dc = DataConfig(vocab_size=256, seq_len=32, global_batch=8)
+    d = "/tmp/repro_test_ckpt_b"
+    opt = AdamWConfig(lr=1e-3, warmup_steps=3, total_steps=20)
+
+    shutil.rmtree(d, ignore_errors=True)
+    tr = Trainer(CFG, dc, opt, TrainerConfig(total_steps=20, ckpt_every=10,
+                                             ckpt_dir=d, log_every=100))
+    clean = tr.run(resume=False)
+
+    shutil.rmtree(d, ignore_errors=True)
+    tr2 = Trainer(CFG, dc, opt, TrainerConfig(total_steps=20, ckpt_every=10,
+                                              ckpt_dir=d, log_every=100),
+                  failure_injector=FailureInjector(fail_at_steps=(15,)))
+    with pytest.raises(SimulatedFailure):
+        tr2.run(resume=False)
+    tr3 = Trainer(CFG, dc, opt, TrainerConfig(total_steps=20, ckpt_every=10,
+                                              ckpt_dir=d, log_every=100))
+    resumed = tr3.run(resume=True)
+    assert len(resumed) == 10                     # steps 10..19
+    np.testing.assert_allclose(resumed[-1], clean[-1], rtol=1e-5)
+
+
+def test_grad_accumulation_matches_full_batch():
+    # deterministic objective (AR CE): microbatched accumulation must match
+    # the full-batch gradient exactly (the diffusion loss samples a
+    # different mask per microbatch, so it is compared distributionally in
+    # the smoke/train tests instead)
+    cfg = CFG.replace(diffusion=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 4,
+                                          256)}
+    rng = jax.random.PRNGKey(2)
+
+    s1 = jax.jit(make_train_step(model, opt, microbatches=1))
+    s2 = jax.jit(make_train_step(model, opt, microbatches=2))
+    p1, _, m1 = s1(params, opt.init(params), batch, rng)
+    p2, _, m2 = s2(params, opt.init(params), batch, rng)
+    d1 = jnp.concatenate([(a - b).ravel() for a, b in
+                          zip(jax.tree.leaves(p1), jax.tree.leaves(params))])
+    d2 = jnp.concatenate([(a - b).ravel() for a, b in
+                          zip(jax.tree.leaves(p2), jax.tree.leaves(params))])
+    cos = jnp.dot(d1, d2) / (jnp.linalg.norm(d1) * jnp.linalg.norm(d2))
+    assert cos > 0.98                              # same descent direction
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    assert np.isfinite(float(m2["loss"]))
+
+
+def test_checkpoint_roundtrip_and_rotation():
+    d = "/tmp/repro_test_ckpt_c"
+    shutil.rmtree(d, ignore_errors=True)
+    mgr = CheckpointManager(d, keep=2, async_save=False)
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda x: x * step, tree))
+    assert mgr.latest_step() == 30
+    restored, step = mgr.restore_latest(tree)
+    assert step == 30
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.arange(10) * 30)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    # rotation kept only 2
+    kept = [x for x in os.listdir(d) if x.startswith("step_")]
+    assert len(kept) == 2
+
+
+def test_synthetic_data_is_pure_function_of_step():
+    dc = DataConfig(vocab_size=256, seq_len=64, global_batch=4)
+    s1 = SyntheticTokenStream(dc)
+    s2 = SyntheticTokenStream(dc)
+    np.testing.assert_array_equal(s1.batch(17), s2.batch(17))
+    assert not np.array_equal(s1.batch(17), s1.batch(18))
+    assert s1.batch(0).min() >= dc.reserved_low
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(min_samples=4, threshold_mads=4.0)
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        for h in range(8):
+            mon.record(h, 0.1 + 0.005 * rng.random())
+        mon.record(8, 0.5 + 0.01 * rng.random())   # slow host
+    assert mon.stragglers() == [8]
+    assert 0.05 < mon.fleet_p50() < 0.2
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector(fail_at_steps=(5,))
+    for step in range(5):
+        inj.check(step)
+    with pytest.raises(SimulatedFailure):
+        inj.check(5)
+    inj.check(5)                                   # second pass: no refire
+
+
+def test_factored_adamw_shapes():
+    opt = AdamW(AdamWConfig(factored=True, state_dtype="bfloat16"))
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((8, 8)),
+              "vec": jnp.zeros((300,))}
+    st = opt.init(params)
+    assert set(st["mu"]["big"]) == {"m", "vr", "vc"}
+    assert st["mu"]["big"]["vr"].shape == (256,)
+    assert st["mu"]["big"]["vc"].shape == (512,)
+    assert set(st["mu"]["small"]) == {"m", "v"}
+    grads = jax.tree.map(jnp.ones_like, params)
+    p2, st2, _ = opt.update(grads, st, params)
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p2))
