@@ -1,0 +1,152 @@
+"""Cluster serving sweep: router policy × replica count × arrival rate.
+
+Runs the multi-replica virtual-clock simulation over Poisson and bursty
+traces, writes ``benchmarks/out/cluster_sweep.csv``, and emits headline
+comparisons — in particular the saturation-aware router's throughput at
+matched P90 TPOT against join-shortest-queue (the operating-point framing
+of ADOR: a router is only better if it moves the latency/throughput
+frontier, not one axis).
+
+    PYTHONPATH=src python -m benchmarks.cluster_sweep [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.cluster import build_sim_cluster                    # noqa: E402
+from repro.configs import get_config                           # noqa: E402
+from repro.serving import DATASETS, make_trace                 # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def emit(name, value, derived=""):
+    print(f"{name},{value},{derived}")
+
+
+def write_csv(fname, header, rows):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, fname), "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+
+
+def run_cell(cfg, profile, n_replicas, router_name, trace, rate, n_req,
+             seed=0):
+    cluster = build_sim_cluster(cfg, profile, n_replicas, router_name,
+                                seed=seed)
+    wl = make_trace(profile, trace, rate, n_req, seed=seed)
+    return cluster.run(list(wl))
+
+
+def cluster_sweep(quick=False):
+    cfg = get_config("sdar-8b")
+    profile = DATASETS["sharegpt"]
+    n_req = 120 if quick else 200
+    seeds = [0] if quick else [0, 1]
+    routers = ["round_robin", "jsq", "saturation"]
+    replica_counts = [2, 4] if quick else [2, 4, 8]
+    rates = {2: [4, 16, 48], 4: [8, 32, 96], 8: [16, 64, 192]} if quick \
+        else {2: [2, 4, 8, 16, 32, 48, 96],
+              4: [4, 8, 16, 32, 64, 96, 192],
+              8: [8, 16, 32, 64, 128, 192, 384]}
+    traces = ["poisson"] if quick else ["poisson", "bursty"]
+
+    rows = []
+    cells = {}             # (n, trace, router, rate) -> (mean_tp, mean_p90)
+    for n in replica_counts:
+        for trace in traces:
+            for router in routers:
+                for rate in rates[n]:
+                    acc = []
+                    for seed in seeds:
+                        rep = run_cell(cfg, profile, n, router, trace, rate,
+                                       n_req, seed=seed)
+                        util = rep.replica_utilization()
+                        acc.append([len(rep.metrics),
+                                    rep.throughput, rep.goodput(0.050),
+                                    rep.tpot_percentile(90),
+                                    rep.ttft_percentile(90),
+                                    float(np.mean(util)),
+                                    float(np.std(util)),
+                                    rep.spills, rep.preemptions])
+                    (done, tp, gp, p90, ttft, u_m, u_s,
+                     spills, preempts) = np.mean(acc, axis=0)
+                    rows.append([n, trace, router, rate, f"{done:.1f}",
+                                 f"{tp:.1f}", f"{gp:.1f}",
+                                 f"{p90*1e3:.2f}", f"{ttft*1e3:.1f}",
+                                 f"{u_m:.3f}", f"{u_s:.3f}",
+                                 f"{spills:.1f}", f"{preempts:.1f}"])
+                    cells[(n, trace, router, rate)] = (tp, p90)
+    write_csv("cluster_sweep.csv",
+              ["replicas", "trace", "router", "rate", "completed", "tok_s",
+               "goodput_tok_s", "p90_tpot_ms", "p90_ttft_ms", "util_mean",
+               "util_std", "spills", "preemptions"], rows)
+
+    # Headline: at matched offered load, cells split three ways — equal
+    # P90 TPOT (within a 5%-or-1ms noise band, where the saturation router
+    # must deliver >= JSQ's throughput), strict latency wins (P90 more than
+    # 5% better), and latency trades (P90 more than 5% worse, throughput
+    # bought with tail latency).
+    equal_ratios, all_ratios = [], []
+    lat_wins = lat_trades = 0
+    for n in replica_counts:
+        for trace in traces:
+            for rate in rates[n]:
+                tp_s, p90_s = cells[(n, trace, "saturation", rate)]
+                tp_j, p90_j = cells[(n, trace, "jsq", rate)]
+                all_ratios.append(tp_s / tp_j)
+                if abs(p90_s - p90_j) <= max(0.05 * p90_j, 1e-3):
+                    equal_ratios.append(tp_s / tp_j)
+                elif p90_s < p90_j:
+                    lat_wins += 1
+                else:
+                    lat_trades += 1
+    if equal_ratios:
+        emit("cluster.saturation_vs_jsq_equal_p90_min",
+             f"{min(equal_ratios):.3f}",
+             "min tok/s ratio over matched-rate cells with equal P90 TPOT")
+        emit("cluster.saturation_vs_jsq_equal_p90_geomean",
+             f"{np.exp(np.mean(np.log(equal_ratios))):.3f}",
+             f"{len(equal_ratios)}/{len(all_ratios)} cells at equal P90; "
+             f"{lat_wins} strict latency wins, {lat_trades} latency trades")
+    else:
+        emit("cluster.saturation_vs_jsq_equal_p90",
+             "n/a",
+             f"no matched-rate cell in the equal-P90 band; "
+             f"{lat_wins} strict latency wins, {lat_trades} latency trades")
+    emit("cluster.saturation_vs_jsq_all_cells_geomean",
+         f"{np.exp(np.mean(np.log(all_ratios))):.3f}",
+         "tok/s ratio over every matched-rate cell")
+
+    # scaling: goodput per replica as the fleet grows (fixed per-replica rate)
+    for trace in traces:
+        per_rep = []
+        for n in replica_counts:
+            mid = rates[n][len(rates[n]) // 2]
+            rep = run_cell(cfg, profile, n, "saturation", trace, mid, n_req)
+            per_rep.append(rep.throughput / n)
+        emit(f"cluster.{trace}.tok_s_per_replica_across_scale",
+             "/".join(f"{v:.0f}" for v in per_rep),
+             f"replicas {replica_counts}, per-replica rate held ~constant")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,value,derived")
+    cluster_sweep(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

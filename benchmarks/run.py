@@ -475,6 +475,12 @@ def bench_kernels(quick=False):
          "interpret-mode (correctness path), not TPU wall time")
 
 
+def cluster(quick=False):
+    """Multi-replica router/admission sweep (see benchmarks/cluster_sweep)."""
+    from benchmarks.cluster_sweep import cluster_sweep
+    cluster_sweep(quick=quick)
+
+
 ALL = {
     "table2": table2_profiles,
     "fig1": fig1_load_sensitivity,
@@ -488,6 +494,7 @@ ALL = {
     "fig12": fig12_scaling,
     "fig13": fig13_ablation,
     "kernels": bench_kernels,
+    "cluster": cluster,
 }
 
 

@@ -1,0 +1,17 @@
+"""Multi-replica cluster serving: load-aware routing, KV-pressure admission
+with spill-back, optional low-priority preemption, and a shared-virtual-clock
+event loop over steppable :class:`~repro.serving.engine.EngineCore` replicas.
+"""
+
+from repro.cluster.admission import KVAdmissionPolicy, fits_ever, kv_tokens
+from repro.cluster.engine import ClusterEngine
+from repro.cluster.factory import build_sim_cluster, make_replica_scheduler
+from repro.cluster.router import (ROUTERS, JoinShortestQueueRouter,
+                                  RoundRobinRouter, SaturationAwareRouter,
+                                  make_router)
+
+__all__ = [
+    "ClusterEngine", "KVAdmissionPolicy", "fits_ever", "kv_tokens",
+    "RoundRobinRouter", "JoinShortestQueueRouter", "SaturationAwareRouter",
+    "ROUTERS", "make_router", "build_sim_cluster", "make_replica_scheduler",
+]

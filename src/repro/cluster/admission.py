@@ -1,0 +1,89 @@
+"""KV-pressure-aware cluster admission with queue spill-back.
+
+Fan et al. (*Taming the Memory Footprint Crisis*) show that at fleet scale
+the binding constraint is KV-cache admission: placing a request on a replica
+whose pool cannot (soon) hold it head-of-line-blocks that replica's whole
+queue.  The policy here reserves pages for everything already queued on the
+replica and only places a request if the pool keeps a free-page watermark
+after the reservation; otherwise the request *spills back* to the cluster
+queue and is retried as replicas drain.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.serving.request import Request
+
+
+def kv_tokens(req: Request) -> int:
+    return req.prompt_len + req.max_new_tokens
+
+
+def fits_ever(core, req: Request) -> bool:
+    """Whether the request could be admitted on an *empty* replica — a
+    request bigger than the whole KV pool (or model slot length) would
+    otherwise queue forever and live-lock the event loop."""
+    kv = getattr(core.backend, "kv", None)
+    if kv is not None:
+        return kv.pages_for(kv_tokens(req)) <= kv.n_pages
+    max_len = getattr(core.backend, "max_len", None)
+    if max_len is not None:
+        return kv_tokens(req) <= max_len
+    return True
+
+
+@dataclass
+class KVAdmissionPolicy:
+    """Admit onto a replica only if, after reserving pages for every request
+    already queued there, the new request still fits with ``low_watermark``
+    of the pool left free (headroom for in-flight growth)."""
+
+    low_watermark: float = 0.05
+
+    def reserved_pages(self, core) -> int:
+        kv = getattr(core.backend, "kv", None)
+        if kv is None:
+            return 0
+        return sum(kv.pages_for(kv_tokens(r)) for r in core.pending_requests())
+
+    def admissible(self, core, req: Request) -> bool:
+        kv = getattr(core.backend, "kv", None)
+        if kv is None:
+            # Slot-based backends (ModelBackend): queue if the request can
+            # ever fit; the engine-level can_admit gate does the rest.
+            return core.backend.can_admit(req) or core.n_active > 0
+        need = kv.pages_for(kv_tokens(req))
+        headroom = kv.free_pages - self.reserved_pages(core) - need
+        return headroom >= self.low_watermark * kv.n_pages
+
+    # -- preemption support ------------------------------------------------
+    def preemption_victims(self, core, req: Request) -> list[int]:
+        """Smallest set of lower-priority active rids whose eviction frees
+        enough pages to admit ``req`` (lowest priority, least progress
+        first).  Empty list ⇒ preemption cannot help on this replica."""
+        kv = getattr(core.backend, "kv", None)
+        if kv is None:
+            return []
+        need = kv.pages_for(kv_tokens(req))
+        deficit = need + self.reserved_pages(core) - kv.free_pages \
+            + int(self.low_watermark * kv.n_pages)
+        if deficit <= 0:
+            return []            # admissible without eviction
+
+        def progress(r):
+            try:
+                return core.backend.state(r.rid).n_committed
+            except KeyError:
+                return 0
+
+        candidates = sorted(
+            (r for r in core.active_requests() if r.priority < req.priority),
+            key=lambda r: (r.priority, progress(r)))
+        victims, freed = [], 0
+        for r in candidates:
+            victims.append(r.rid)
+            freed += len(kv.block_table(r.rid))
+            if freed >= deficit:
+                return victims
+        return []                # even evicting everything would not fit

@@ -1,0 +1,150 @@
+"""Multi-replica cluster serving on a shared virtual timeline.
+
+:class:`ClusterEngine` drives N :class:`~repro.serving.engine.EngineCore`
+replicas as a discrete-event simulation: each replica owns a local
+:class:`~repro.serving.clock.VirtualClock` (replicas run concurrently in
+real deployments, so their timelines advance independently), and the
+cluster loop always services the earliest next event — either a workload
+arrival (routed + admission-checked, possibly spilling back to the cluster
+queue or preempting a low-priority request) or the lagging replica's next
+engine iteration.  Determinism: ties break on replica index, and all
+randomness lives inside the per-replica backends.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.cluster.admission import KVAdmissionPolicy, fits_ever
+from repro.serving.engine import EngineCore
+from repro.serving.metrics import ClusterReport
+from repro.serving.request import Request
+
+
+@dataclass
+class ClusterEngine:
+    replicas: list                      # [EngineCore]
+    router: object
+    admission: KVAdmissionPolicy = field(default_factory=KVAdmissionPolicy)
+    enable_preemption: bool = False
+    max_events: int = 50_000_000
+
+    def __post_init__(self):
+        n = len(self.replicas)
+        if n == 0:
+            raise ValueError("cluster needs at least one replica")
+        self.route_counts = [0] * n
+        self.spill_events = 0
+        self._spill: list[Request] = []
+        self.rejected: list[Request] = []
+
+    # ------------------------------------------------------------------
+    def run(self, requests) -> ClusterReport:
+        arrivals = list(reversed(
+            sorted(requests, key=lambda r: r.arrival_time)))
+        events = 0
+        while arrivals or self._spill or \
+                any(not r.idle for r in self.replicas):
+            events += 1
+            if events > self.max_events:
+                raise RuntimeError("cluster exceeded max_events")
+
+            t_arr = arrivals[-1].arrival_time if arrivals else float("inf")
+            times = [r.next_event_time() for r in self.replicas]
+            t_rep = min(times)
+
+            if arrivals and t_arr <= t_rep:
+                self._dispatch(arrivals.pop())
+                continue
+
+            if t_rep == float("inf"):
+                # Only spilled requests remain and every replica is idle:
+                # force-place on the emptiest pool so work always resumes.
+                self._force_dispatch(self._spill.pop(0))
+                continue
+
+            idx = times.index(t_rep)             # earliest; ties → low index
+            core = self.replicas[idx]
+            # spilled requests can only become placeable when a tick grows
+            # the replica's admissible slack (free pages minus pages still
+            # reserved for its queue) — skip the O(spill) re-rank
+            # otherwise, it is the hot loop of the saturated regime
+            slack_before = self._slack(core) if self._spill else None
+            core.tick()
+            if self._spill and (slack_before is None or
+                                self._slack(core) > slack_before):
+                self._retry_spill()
+
+        return ClusterReport(
+            [r.report() for r in self.replicas],
+            spills=self.spill_events,
+            preemptions=sum(r.preemptions for r in self.replicas),
+            route_counts=list(self.route_counts),
+            rejected=[r.rid for r in self.rejected])
+
+    # ------------------------------------------------------------------
+    def _slack(self, core) -> float:
+        kv = getattr(core.backend, "kv", None)
+        if kv is None:
+            return -core.queue_depth       # slot backends: retirements help
+        return kv.free_pages - self.admission.reserved_pages(core)
+
+    def _place(self, req: Request) -> bool:
+        """Walk the router's ranking; place on the first replica the
+        admission policy accepts."""
+        for idx in self.router.rank(self.replicas, req):
+            core = self.replicas[idx]
+            if self.admission.admissible(core, req):
+                core.submit(req)
+                self._mark_placed(idx)
+                return True
+        return False
+
+    def _mark_placed(self, idx: int):
+        self.route_counts[idx] += 1
+        placed = getattr(self.router, "placed", None)
+        if placed is not None:
+            placed(idx, len(self.replicas))
+
+    def _dispatch(self, req: Request):
+        if not any(fits_ever(r, req) for r in self.replicas):
+            self.rejected.append(req)     # would queue forever: refuse early
+            return
+        if self._place(req):
+            return
+        if self.enable_preemption and self._try_preempt(req):
+            return
+        self._spill.append(req)
+        self.spill_events += 1
+
+    def _try_preempt(self, req: Request) -> bool:
+        for idx in self.router.rank(self.replicas, req):
+            core = self.replicas[idx]
+            victims = self.admission.preemption_victims(core, req)
+            if victims:
+                for rid in victims:
+                    core.preempt(rid)
+                # the preemptor's higher priority queues it ahead of the
+                # victims it just evicted (EngineCore orders admission by
+                # (-priority, arrival)), so the freed pages are its
+                core.submit(req)
+                self._mark_placed(idx)
+                return True
+        return False
+
+    def _retry_spill(self):
+        still = []
+        for req in self._spill:
+            if not self._place(req):
+                still.append(req)
+        self._spill = still
+
+    def _force_dispatch(self, req: Request):
+        def free_pages(core):
+            kv = getattr(core.backend, "kv", None)
+            return kv.free_pages if kv is not None else 0
+
+        idx = max(range(len(self.replicas)),
+                  key=lambda i: (free_pages(self.replicas[i]), -i))
+        self.replicas[idx].submit(req)
+        self._mark_placed(idx)

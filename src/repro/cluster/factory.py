@@ -1,0 +1,48 @@
+"""Shared construction of simulated clusters.
+
+The launcher, benchmark sweep, and example all build the same thing: N
+`SimBackend` replicas (per-replica RNG seed and KV pool) with per-replica
+schedulers, wrapped in a :class:`ClusterEngine`.  One factory keeps their
+replica seeding, scheduler profiling, and admission defaults in lock-step.
+"""
+
+from __future__ import annotations
+
+from repro.cluster.admission import KVAdmissionPolicy
+from repro.cluster.engine import ClusterEngine
+from repro.cluster.router import make_router
+from repro.core.latency_model import TPU_V5E
+from repro.core.scheduler import scheduler_for_mode
+from repro.serving import EngineCore, SimBackend
+
+
+def make_replica_scheduler(backend, profile, mode: str = "elastic"):
+    """Per-replica scheduler for a SimBackend (elastic | ar | bd<chunk>)."""
+    return scheduler_for_mode(
+        mode, backend.analytic,
+        prior_tokens_per_step=profile.tokens_per_step_bd32)
+
+
+def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
+                      device=TPU_V5E, mode: str = "elastic",
+                      kv_pages: int = 1 << 16, max_batch: int = 256,
+                      seed: int = 0, kv_watermark: float = 0.05,
+                      preemption: bool = False) -> ClusterEngine:
+    """N independent SimBackend+scheduler replicas (per-replica RNG seeds,
+    per-replica TU estimator state) under one ClusterEngine.  ``router``
+    may be a name (see :data:`repro.cluster.router.ROUTERS`) or a router
+    instance."""
+    if isinstance(router, str):
+        router = make_router(router)
+    replicas = []
+    for i in range(n_replicas):
+        be = SimBackend(cfg, device,
+                        tokens_per_step=profile.tokens_per_step_bd32,
+                        decode_mode="ar" if mode == "ar" else "elastic",
+                        kv_pool_pages=kv_pages, seed=seed + 1000 * i)
+        sch = make_replica_scheduler(be, profile, mode)
+        replicas.append(EngineCore(be, sch, max_batch=max_batch))
+    return ClusterEngine(replicas, router,
+                         admission=KVAdmissionPolicy(
+                             low_watermark=kv_watermark),
+                         enable_preemption=preemption)

@@ -65,6 +65,22 @@ class ElasticScheduler:
                                 prior_tokens_per_step=prior_tokens_per_step)
         return cls(lm, tu, tuple(candidates), **kw)
 
+    PROFILE_BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+    PROFILE_CHUNKS = (1, 2, 4, 8, 16, 32)
+
+    @classmethod
+    def from_analytic(cls, analytic, prior_tokens_per_step: float = 3.8,
+                      batches=PROFILE_BATCHES, chunks=PROFILE_CHUNKS,
+                      ctx: float = 512.0, **kw):
+        """Profile an :class:`AnalyticDeviceModel` over the standard
+        offline grid (the stand-in for wall-clock profiling used by every
+        launcher/benchmark) and fit the scheduler from it."""
+        samples = [(b, c, analytic.step_latency(b, c, ctx))
+                   for b in batches for c in chunks]
+        return cls.from_profile(samples,
+                                prior_tokens_per_step=prior_tokens_per_step,
+                                **kw)
+
 
 @dataclass
 class FixedScheduler:
@@ -78,3 +94,17 @@ class FixedScheduler:
 
     def observe(self, commit_masks, valid_lens):
         pass
+
+
+def scheduler_for_mode(mode: str, analytic=None,
+                       prior_tokens_per_step: float = 3.8, **kw):
+    """Single owner of the mode-string mapping used by every launcher:
+    ``elastic`` | ``ar`` | ``bd<chunk>`` (e.g. ``bd32``)."""
+    if mode == "elastic":
+        return ElasticScheduler.from_analytic(
+            analytic, prior_tokens_per_step=prior_tokens_per_step, **kw)
+    if mode == "ar":
+        return FixedScheduler(1)
+    if mode.startswith("bd"):
+        return FixedScheduler(int(mode[2:]))
+    raise ValueError(f"unknown scheduler mode {mode!r}")

@@ -16,24 +16,16 @@ import jax
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.latency_model import DEVICES
-from repro.core.scheduler import DEFAULT_CHUNKS, ElasticScheduler, FixedScheduler
+from repro.core.scheduler import ElasticScheduler, scheduler_for_mode
 from repro.models.registry import build_model
 from repro.serving import (DATASETS, ModelBackend, PoissonWorkload,
                            ServingEngine, SimBackend, chunk_distribution)
 
 
 def make_scheduler(mode: str, backend, profile):
-    if mode == "elastic":
-        samples = [(b, c, backend.analytic.step_latency(b, c, 512))
-                   for b in [1, 2, 4, 8, 16, 32, 64, 128, 256]
-                   for c in [1, 2, 4, 8, 16, 32]]
-        return ElasticScheduler.from_profile(
-            samples, prior_tokens_per_step=profile.tokens_per_step_bd32)
-    if mode == "ar":
-        return FixedScheduler(1)
-    if mode.startswith("bd"):
-        return FixedScheduler(int(mode[2:]))
-    raise ValueError(mode)
+    return scheduler_for_mode(
+        mode, backend.analytic if backend is not None else None,
+        prior_tokens_per_step=profile.tokens_per_step_bd32)
 
 
 def main():
@@ -80,15 +72,13 @@ def main():
                 4, cfg.vocab_size, r.prompt_len).tolist()
         # wall-clock-free scheduler from a quick analytic stand-in
         from repro.core.latency_model import AnalyticDeviceModel, CPU_HOST
-        an = AnalyticDeviceModel(cfg, CPU_HOST)
-        samples = [(b, c, an.step_latency(b, c, 128))
-                   for b in [1, 2, 4, 8] for c in [1, 2, 4, 8, 16, 32]]
         if args.mode == "elastic":
-            sched = ElasticScheduler.from_profile(
-                samples, prior_tokens_per_step=profile.tokens_per_step_bd32)
+            sched = ElasticScheduler.from_analytic(
+                AnalyticDeviceModel(cfg, CPU_HOST),
+                prior_tokens_per_step=profile.tokens_per_step_bd32,
+                batches=(1, 2, 4, 8), ctx=128.0)
         else:
-            sched = make_scheduler(args.mode, None, profile) \
-                if args.mode != "elastic" else None
+            sched = make_scheduler(args.mode, None, profile)
 
     engine = ServingEngine(backend, sched, max_batch=args.max_batch)
     report = engine.run(list(wl))

@@ -1,16 +1,20 @@
 from repro.serving.backends import ARState, ModelBackend, SimBackend, StepInfo
 from repro.serving.clock import VirtualClock, WallClock
-from repro.serving.engine import EngineReport, ServingEngine
+from repro.serving.engine import EngineCore, EngineReport, ServingEngine
 from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
-from repro.serving.metrics import chunk_distribution, slo_capacity
+from repro.serving.metrics import (ClusterReport, chunk_distribution,
+                                   slo_capacity)
 from repro.serving.request import Request, RequestMetrics
 from repro.serving.workload import (DATASETS, CommitSimulator, DatasetProfile,
-                                    PoissonWorkload, fixed_batch_workload)
+                                    PoissonWorkload, RateVaryingWorkload,
+                                    bursty_rate, diurnal_rate,
+                                    fixed_batch_workload, make_trace)
 
 __all__ = [
     "ARState", "ModelBackend", "SimBackend", "StepInfo", "VirtualClock",
-    "WallClock", "EngineReport", "ServingEngine", "OutOfPages",
-    "PagedKVAllocator", "chunk_distribution", "slo_capacity", "Request",
-    "RequestMetrics", "DATASETS", "CommitSimulator", "DatasetProfile",
-    "PoissonWorkload", "fixed_batch_workload",
+    "WallClock", "EngineCore", "EngineReport", "ServingEngine", "OutOfPages",
+    "PagedKVAllocator", "ClusterReport", "chunk_distribution", "slo_capacity",
+    "Request", "RequestMetrics", "DATASETS", "CommitSimulator",
+    "DatasetProfile", "PoissonWorkload", "RateVaryingWorkload", "bursty_rate",
+    "diurnal_rate", "fixed_batch_workload", "make_trace",
 ]

@@ -7,6 +7,12 @@ batched decode step; (4) feed realized commits back to the TU estimator;
 (5) retire finished requests.  This is the paper's finer-than-block
 "update the batch at every decoding iteration" scheduling (cf. LMDeploy),
 plus Optimus's chunk-size control loop.
+
+The engine is split into a steppable :class:`EngineCore` — ``submit()`` /
+``tick()`` / ``drain()`` against an externally owned clock — so a cluster
+event loop can interleave N replica cores on a shared virtual timeline
+(see :mod:`repro.cluster`), and a thin :class:`ServingEngine` wrapper that
+preserves the original single-replica ``run()`` API bit-for-bit.
 """
 
 from __future__ import annotations
@@ -28,6 +34,8 @@ class EngineReport:
     decode_time: float
     total_tokens: int
     computed_tokens: int
+    busy_time: float = 0.0  # clock time spent in prefill + decode steps
+    preemptions: int = 0
 
     @property
     def throughput(self) -> float:
@@ -47,7 +55,241 @@ class EngineReport:
         return float(np.percentile(vals, q)) if vals else float("nan")
 
 
+class EngineCore:
+    """Steppable engine core: one replica's continuous-batching loop.
+
+    The core never owns the simulation loop — the caller drives it:
+
+        core.submit(requests)
+        while core.tick():
+            ...                     # interleave other replicas here
+        report = core.report()
+
+    ``tick()`` executes exactly one iteration of the classic engine loop
+    (admission, then either one batched decode step or an idle clock jump to
+    the next arrival) and returns ``False`` once there is no work left, so
+    ``run()``-style draining and cluster-level interleaving share one code
+    path.
+    """
+
+    def __init__(self, backend, scheduler, *, max_batch: int = 256,
+                 clock=None, max_steps: int = 2_000_000):
+        self.backend = backend
+        self.scheduler = scheduler
+        self.max_batch = max_batch
+        self.clock = clock if clock is not None else VirtualClock()
+        self.max_steps = max_steps
+        # _pending is kept sorted DESCENDING by (-priority, arrival_time) so
+        # that pop() yields the highest-priority, earliest arrival (FIFO
+        # among equals).  With uniform priorities this is plain
+        # arrival-order FCFS, matching the historical run() loop exactly;
+        # with priorities it lets a preemptor admit ahead of the victim it
+        # just evicted (whose arrival_time is necessarily older).
+        self._pending: list[Request] = []
+        self._active: list[Request] = []
+        self._metrics: dict[int, RequestMetrics] = {}
+        self._chunk_hist: list = []
+        self._batch_hist: list = []
+        self._done: list[RequestMetrics] = []
+        self._first_decode_t = None
+        self._steps = 0
+        self._busy = 0.0
+        self.preemptions = 0
+
+    # -- queue introspection (used by routers / admission policies) -------
+    @property
+    def idle(self) -> bool:
+        return not (self._pending or self._active)
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._pending) + len(self._active)
+
+    def active_requests(self) -> list[Request]:
+        return list(self._active)
+
+    def pending_requests(self) -> list[Request]:
+        return list(self._pending)
+
+    def _earliest_arrival(self) -> float:
+        # _pending is priority-ordered, so the earliest arrival may sit
+        # anywhere in it; with uniform priorities it is _pending[-1].
+        return min(r.arrival_time for r in self._pending)
+
+    def next_event_time(self) -> float:
+        """Virtual time of this core's next actionable event (``inf`` when
+        idle).  A busy core can act now; a core with only queued arrivals
+        acts when the earliest one lands."""
+        if self._active:
+            return self.clock.now()
+        if self._pending:
+            return max(self.clock.now(), self._earliest_arrival())
+        return float("inf")
+
+    # -- submission -------------------------------------------------------
+    @staticmethod
+    def _queue_key(req: Request):
+        return (-req.priority, req.arrival_time)
+
+    def submit(self, req: Request):
+        """Enqueue one request (binary insert, FIFO among equal keys)."""
+        p = self._pending
+        key = self._queue_key(req)
+        lo, hi = 0, len(p)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self._queue_key(p[mid]) > key:
+                lo = mid + 1
+            else:
+                hi = mid
+        p.insert(lo, req)
+
+    def submit_all(self, requests):
+        """Bulk submit; on an empty queue this reproduces the historical
+        ``run()`` ordering exactly (stable sort; pure arrival order when
+        priorities are uniform)."""
+        if not self._pending:
+            self._pending = list(reversed(
+                sorted(requests, key=self._queue_key)))
+        else:
+            for r in requests:
+                self.submit(r)
+
+    # -- the loop body -----------------------------------------------------
+    def tick(self) -> bool:
+        """Run one engine iteration.  Returns ``False`` when idle."""
+        if self.idle:
+            return False
+        self._steps += 1
+        if self._steps > self.max_steps:
+            raise RuntimeError("engine exceeded max_steps")
+        now = self.clock.now()
+        self._admit(now)
+        if not self._active:
+            if self._pending:
+                self.clock.advance_to(self._earliest_arrival())
+            return True
+        self._decode_once()
+        return True
+
+    def drain(self):
+        while self.tick():
+            pass
+
+    # -- admission (FCFS, prefill prioritized) -----------------------------
+    def _next_admittable(self, now: float) -> int:
+        """Index of the best queued request that has already arrived —
+        scanning from the tail walks priority order; with uniform
+        priorities the tail itself is the earliest arrival (plain FCFS)."""
+        for i in range(len(self._pending) - 1, -1, -1):
+            if self._pending[i].arrival_time <= now:
+                return i
+        return -1
+
+    def _admit(self, now: float):
+        while len(self._active) < self.max_batch:
+            i = self._next_admittable(now)
+            if i < 0 or not self.backend.can_admit(self._pending[i]):
+                break
+            req = self._pending.pop(i)
+            m = self._metrics.get(req.rid)
+            if m is None:
+                m = RequestMetrics(req.rid, req.arrival_time)
+                self._metrics[req.rid] = m
+            m.admit_time = now
+            prefill_lat = self.backend.admit(req)
+            self.clock.advance(prefill_lat)
+            self._busy += prefill_lat
+            now = self.clock.now()
+            st = self.backend.state(req.rid)
+            if st.n_committed > 0 and m.first_token_time < 0:
+                m.first_token_time = now     # AR: token from prefill
+            self._active.append(req)
+
+    # -- one elastic decode iteration --------------------------------------
+    def _decode_once(self):
+        b = len(self._active)
+        chunk = self.scheduler.select(b)
+        rids = [r.rid for r in self._active]
+        latency, infos = self.backend.decode_step(rids, chunk)
+        self.clock.advance(latency)
+        self._busy += latency
+        now = self.clock.now()
+        if self._first_decode_t is None:
+            self._first_decode_t = now - latency
+        self._chunk_hist.append((now, b, chunk))
+        self._batch_hist.append(b)
+
+        commit_masks, valids = [], []
+        still_active = []
+        for req in self._active:
+            info = infos[req.rid]
+            m = self._metrics[req.rid]
+            if info.n_committed > 0 and m.first_token_time < 0:
+                m.first_token_time = now
+            if info.valid_len > 0:
+                commit_masks.append(info.commit_mask)
+                valids.append(info.valid_len)
+            if info.done:
+                st = self.backend.state(req.rid)
+                m.finish_time = now
+                m.n_tokens = st.n_committed
+                # += so work discarded by earlier preemptions stays counted
+                m.computed_tokens += st.computed_tokens
+                m.decode_steps += st.steps
+                self._done.append(m)
+                self.backend.release(req.rid)
+            else:
+                still_active.append(req)
+        self._active = still_active
+        self.scheduler.observe(commit_masks, valids)
+
+    # -- preemption (cluster KV-pressure relief) ---------------------------
+    def preempt(self, rid: int) -> bool:
+        """Evict an active request: release its backend state (freeing its
+        KV pages) and requeue it for re-admission — it re-prefills from
+        scratch, losing decode progress (Fan et al.'s evict+recompute)."""
+        for i, req in enumerate(self._active):
+            if req.rid == rid:
+                self._active.pop(i)
+                st = self.backend.state(rid)
+                m = self._metrics[rid]
+                # bank the wasted compute so token_utilization reflects the
+                # recompute cost of eviction
+                m.computed_tokens += st.computed_tokens
+                m.decode_steps += st.steps
+                m.preemptions += 1
+                m.first_token_time = -1.0    # progress discarded
+                self.backend.release(rid)
+                self.preemptions += 1
+                self.submit(req)
+                return True
+        return False
+
+    # -- results -----------------------------------------------------------
+    def report(self) -> EngineReport:
+        total_tokens = sum(m.n_tokens for m in self._done)
+        computed = sum(m.computed_tokens for m in self._done)
+        end = self.clock.now()
+        decode_span = end - (self._first_decode_t or 0.0)
+        return EngineReport(self._done, self._chunk_hist, self._batch_hist,
+                            end, max(decode_span, 1e-9), total_tokens,
+                            computed, busy_time=self._busy,
+                            preemptions=self.preemptions)
+
+
 class ServingEngine:
+    """Single-replica façade: the historical blocking ``run()`` API, now a
+    thin wrapper over :class:`EngineCore`."""
+
     def __init__(self, backend, scheduler, *, max_batch: int = 256,
                  clock=None, max_steps: int = 2_000_000):
         self.backend = backend
@@ -57,80 +299,9 @@ class ServingEngine:
         self.max_steps = max_steps
 
     def run(self, requests) -> EngineReport:
-        pending = sorted(requests, key=lambda r: r.arrival_time)
-        pending = list(reversed(pending))
-        active: list[Request] = []
-        metrics: dict[int, RequestMetrics] = {}
-        chunk_hist, batch_hist = [], []
-        done_metrics = []
-        first_decode_t = None
-        steps = 0
-
-        while pending or active:
-            steps += 1
-            if steps > self.max_steps:
-                raise RuntimeError("engine exceeded max_steps")
-            now = self.clock.now()
-
-            # --- admission (FCFS, prefill prioritized) ------------------
-            while (pending and pending[-1].arrival_time <= now
-                   and len(active) < self.max_batch
-                   and self.backend.can_admit(pending[-1])):
-                req = pending.pop()
-                m = RequestMetrics(req.rid, req.arrival_time)
-                m.admit_time = now
-                metrics[req.rid] = m
-                prefill_lat = self.backend.admit(req)
-                self.clock.advance(prefill_lat)
-                now = self.clock.now()
-                st = self.backend.state(req.rid)
-                if st.n_committed > 0 and m.first_token_time < 0:
-                    m.first_token_time = now     # AR: token from prefill
-                active.append(req)
-
-            if not active:
-                if pending:
-                    self.clock.advance_to(pending[-1].arrival_time)
-                continue
-
-            # --- one elastic decode iteration ---------------------------
-            b = len(active)
-            chunk = self.scheduler.select(b)
-            rids = [r.rid for r in active]
-            latency, infos = self.backend.decode_step(rids, chunk)
-            self.clock.advance(latency)
-            now = self.clock.now()
-            if first_decode_t is None:
-                first_decode_t = now - latency
-            chunk_hist.append((now, b, chunk))
-            batch_hist.append(b)
-
-            commit_masks, valids = [], []
-            still_active = []
-            for req in active:
-                info = infos[req.rid]
-                m = metrics[req.rid]
-                if info.n_committed > 0 and m.first_token_time < 0:
-                    m.first_token_time = now
-                if info.valid_len > 0:
-                    commit_masks.append(info.commit_mask)
-                    valids.append(info.valid_len)
-                if info.done:
-                    st = self.backend.state(req.rid)
-                    m.finish_time = now
-                    m.n_tokens = st.n_committed
-                    m.computed_tokens = st.computed_tokens
-                    m.decode_steps = st.steps
-                    done_metrics.append(m)
-                    self.backend.release(req.rid)
-                else:
-                    still_active.append(req)
-            active = still_active
-            self.scheduler.observe(commit_masks, valids)
-
-        total_tokens = sum(m.n_tokens for m in done_metrics)
-        computed = sum(m.computed_tokens for m in done_metrics)
-        end = self.clock.now()
-        decode_span = end - (first_decode_t or 0.0)
-        return EngineReport(done_metrics, chunk_hist, batch_hist, end,
-                            max(decode_span, 1e-9), total_tokens, computed)
+        core = EngineCore(self.backend, self.scheduler,
+                          max_batch=self.max_batch, clock=self.clock,
+                          max_steps=self.max_steps)
+        core.submit_all(requests)
+        core.drain()
+        return core.report()

@@ -1,6 +1,9 @@
-"""Serving-level aggregate metrics: SLO capacity search, distributions."""
+"""Serving-level aggregate metrics: SLO capacity search, distributions, and
+cluster-level aggregation across replica EngineReports."""
 
 from __future__ import annotations
+
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -20,6 +23,74 @@ def slo_capacity(run_at_rate, rates, slo_tpot: float, percentile: float = 90.0):
         if p <= slo_tpot:
             capacity = rate
     return capacity, curve
+
+
+@dataclass
+class ClusterReport:
+    """Aggregate over per-replica :class:`~repro.serving.engine.EngineReport`s.
+
+    Cluster time is the makespan (the slowest replica's virtual end time —
+    replicas run concurrently, so wall time is the max, not the sum).
+    ``throughput`` counts every output token; ``goodput(slo)`` counts only
+    tokens of requests whose TPOT met the SLO (the capacity-planning
+    quantity, cf. ADOR's latency/throughput operating points).
+    """
+
+    replica_reports: list
+    spills: int = 0
+    preemptions: int = 0
+    route_counts: list = field(default_factory=list)
+    rejected: list = field(default_factory=list)   # rids refused admission
+
+    @property
+    def metrics(self) -> list:
+        return [m for r in self.replica_reports for m in r.metrics]
+
+    @property
+    def makespan(self) -> float:
+        return max((r.total_time for r in self.replica_reports), default=0.0)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.total_tokens for r in self.replica_reports)
+
+    @property
+    def computed_tokens(self) -> int:
+        return sum(r.computed_tokens for r in self.replica_reports)
+
+    @property
+    def throughput(self) -> float:
+        """Cluster output tokens/sec over the makespan."""
+        return self.total_tokens / max(self.makespan, 1e-9)
+
+    @property
+    def token_utilization(self) -> float:
+        return self.total_tokens / max(self.computed_tokens, 1)
+
+    def goodput(self, slo_tpot: float) -> float:
+        """Output tokens/sec from requests whose TPOT met the SLO."""
+        good = sum(m.n_tokens for m in self.metrics
+                   if m.n_tokens > 0 and m.tpot <= slo_tpot)
+        return good / max(self.makespan, 1e-9)
+
+    def slo_attainment(self, slo_tpot: float) -> float:
+        ms = [m for m in self.metrics if m.n_tokens > 0]
+        if not ms:
+            return float("nan")
+        return sum(m.tpot <= slo_tpot for m in ms) / len(ms)
+
+    def replica_utilization(self) -> list:
+        """Fraction of the cluster makespan each replica spent computing."""
+        span = max(self.makespan, 1e-9)
+        return [r.busy_time / span for r in self.replica_reports]
+
+    def tpot_percentile(self, q: float = 90.0) -> float:
+        vals = [m.tpot for m in self.metrics if m.n_tokens > 0]
+        return float(np.percentile(vals, q)) if vals else float("nan")
+
+    def ttft_percentile(self, q: float = 90.0) -> float:
+        vals = [m.ttft for m in self.metrics if m.first_token_time >= 0]
+        return float(np.percentile(vals, q)) if vals else float("nan")
 
 
 def chunk_distribution(report):

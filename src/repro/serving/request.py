@@ -14,6 +14,7 @@ class Request:
     prompt_tokens: list | None = None      # real-model path
     eos_token: int | None = None
     dataset: str = "synthetic"
+    priority: int = 0                      # higher preempts lower (cluster)
 
 
 @dataclass
@@ -26,6 +27,7 @@ class RequestMetrics:
     n_tokens: int = 0
     computed_tokens: int = 0
     decode_steps: int = 0
+    preemptions: int = 0
 
     @property
     def ttft(self) -> float:

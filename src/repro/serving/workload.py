@@ -115,6 +115,22 @@ class CommitSimulator:
         return self._steady_tokens_per_step(self.p0, seed)
 
 
+def _sample_requests(profile: DatasetProfile, rng, arrivals,
+                     max_prompt: int, max_output: int) -> list:
+    """Draw request shapes from the dataset profile, one prompt/output
+    normal pair per arrival (shared by every open-loop trace generator so
+    poisson-vs-bursty comparisons use identically distributed requests)."""
+    reqs = []
+    for i, at in enumerate(arrivals):
+        p = int(np.clip(rng.normal(profile.input_mean, profile.input_std),
+                        8, max_prompt))
+        o = int(np.clip(rng.normal(profile.output_mean, profile.output_std),
+                        4, max_output))
+        reqs.append(Request(rid=i, arrival_time=float(at), prompt_len=p,
+                            max_new_tokens=o, dataset=profile.name))
+    return reqs
+
+
 class PoissonWorkload:
     """Open-loop Poisson arrival trace over a dataset profile."""
 
@@ -124,22 +140,93 @@ class PoissonWorkload:
         self.rate = rate
         rng = np.random.default_rng(seed)
         gaps = rng.exponential(1.0 / rate, n_requests)
-        arrivals = np.cumsum(gaps)
-        self.requests = []
-        for i in range(n_requests):
-            p = int(np.clip(rng.normal(profile.input_mean, profile.input_std),
-                            8, max_prompt))
-            o = int(np.clip(rng.normal(profile.output_mean, profile.output_std),
-                            4, max_output))
-            self.requests.append(Request(
-                rid=i, arrival_time=float(arrivals[i]), prompt_len=p,
-                max_new_tokens=o, dataset=profile.name))
+        self.requests = _sample_requests(profile, rng, np.cumsum(gaps),
+                                         max_prompt, max_output)
 
     def __iter__(self):
         return iter(self.requests)
 
     def __len__(self):
         return len(self.requests)
+
+
+def diurnal_rate(mean_rate: float, peak_ratio: float = 3.0,
+                 period: float = 600.0):
+    """Sinusoidal day/night intensity with time-average ``mean_rate`` —
+    λ(t) sweeps [trough, trough·peak_ratio] where the trough is scaled so
+    a diurnal trace offers the same load as a Poisson one at equal rate."""
+    trough = mean_rate / (1.0 + 0.5 * (peak_ratio - 1.0))
+
+    def rate(t: float) -> float:
+        phase = 0.5 * (1.0 + np.sin(2.0 * np.pi * t / period))
+        return trough * (1.0 + (peak_ratio - 1.0) * phase)
+    rate.max_rate = trough * peak_ratio
+    return rate
+
+
+def bursty_rate(mean_rate: float, burst_ratio: float = 8.0,
+                period: float = 60.0, duty: float = 0.2):
+    """Square-wave bursts with time-average ``mean_rate``: λ =
+    base·burst_ratio for the first ``duty`` fraction of every period, λ =
+    base otherwise (flash-crowd traffic at the same offered load as a
+    Poisson trace at equal rate)."""
+    base = mean_rate / (duty * burst_ratio + (1.0 - duty))
+
+    def rate(t: float) -> float:
+        in_burst = (t % period) < duty * period
+        return base * (burst_ratio if in_burst else 1.0)
+    rate.max_rate = base * burst_ratio
+    return rate
+
+
+class RateVaryingWorkload:
+    """Open-loop arrivals from a non-homogeneous Poisson process λ(t),
+    sampled by Lewis–Shedler thinning; request shapes come from the same
+    dataset profile sampler as :class:`PoissonWorkload`."""
+
+    def __init__(self, profile: DatasetProfile, rate_fn, n_requests: int,
+                 seed: int = 0, max_rate: float | None = None,
+                 max_prompt: int = 8192, max_output: int = 2048):
+        self.profile = profile
+        self.rate_fn = rate_fn
+        rng = np.random.default_rng(seed)
+        lam_max = max_rate if max_rate is not None else \
+            getattr(rate_fn, "max_rate", None)
+        if lam_max is None:
+            lam_max = max(rate_fn(t) for t in np.linspace(0.0, 3600.0, 7200))
+        t = 0.0
+        arrivals = []
+        while len(arrivals) < n_requests:
+            t += rng.exponential(1.0 / lam_max)
+            lam_t = rate_fn(t)
+            if lam_t > lam_max * (1 + 1e-9):
+                raise ValueError(
+                    f"rate_fn({t:.3f})={lam_t:.3f} exceeds the thinning "
+                    f"bound {lam_max:.3f}; pass max_rate >= sup rate_fn")
+            if rng.random() < lam_t / lam_max:
+                arrivals.append(t)
+        self.requests = _sample_requests(profile, rng, arrivals,
+                                         max_prompt, max_output)
+
+    def __iter__(self):
+        return iter(self.requests)
+
+    def __len__(self):
+        return len(self.requests)
+
+
+def make_trace(profile: DatasetProfile, kind: str, rate: float,
+               n_requests: int, seed: int = 0, **kw):
+    """Factory for the CLI/benchmarks: poisson | bursty | diurnal."""
+    if kind == "poisson":
+        return PoissonWorkload(profile, rate, n_requests, seed=seed, **kw)
+    if kind == "bursty":
+        return RateVaryingWorkload(profile, bursty_rate(rate), n_requests,
+                                   seed=seed, **kw)
+    if kind == "diurnal":
+        return RateVaryingWorkload(profile, diurnal_rate(rate), n_requests,
+                                   seed=seed, **kw)
+    raise ValueError(f"unknown trace kind {kind!r}")
 
 
 def fixed_batch_workload(profile: DatasetProfile, batch: int, seed: int = 0,

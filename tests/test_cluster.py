@@ -1,0 +1,301 @@
+"""Cluster subsystem tests: EngineCore stepping equivalence, routers,
+KV-pressure admission with spill-back, preemption, and rate-varying traces."""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterEngine, JoinShortestQueueRouter,
+                           KVAdmissionPolicy, RoundRobinRouter,
+                           SaturationAwareRouter, make_router)
+from repro.core import ElasticScheduler, FixedScheduler
+from repro.core.latency_model import A100_80G
+from repro.models import ArchConfig
+from repro.serving import (DATASETS, EngineCore, PoissonWorkload,
+                           RateVaryingWorkload, ServingEngine, SimBackend,
+                           bursty_rate, diurnal_rate, make_trace)
+
+CFG = ArchConfig(name="sim8b", family="dense", n_layers=36, d_model=4096,
+                 n_heads=32, n_kv_heads=8, d_ff=12288, vocab_size=151936,
+                 block_size=32)
+PROF = DATASETS["sharegpt"]
+
+
+def _backend(mode="elastic", seed=0, kv_pages=1 << 16, include_prefill=True):
+    return SimBackend(CFG, A100_80G,
+                      tokens_per_step=PROF.tokens_per_step_bd32,
+                      decode_mode=mode, kv_pool_pages=kv_pages, seed=seed,
+                      include_prefill=include_prefill)
+
+
+def _scheduler(be, mode="elastic", chunk=8):
+    if mode == "elastic":
+        return ElasticScheduler.from_analytic(
+            be.analytic, prior_tokens_per_step=PROF.tokens_per_step_bd32)
+    return FixedScheduler(chunk)
+
+
+def _cores(n, seed=0, kv_pages=1 << 16, mode="elastic"):
+    cores = []
+    for i in range(n):
+        be = _backend(seed=seed + 1000 * i, kv_pages=kv_pages)
+        cores.append(EngineCore(be, _scheduler(be, mode), max_batch=256))
+    return cores
+
+
+def _report_key(rep):
+    return ([(m.rid, m.arrival_time, m.admit_time, m.first_token_time,
+              m.finish_time, m.n_tokens, m.computed_tokens, m.decode_steps)
+             for m in rep.metrics],
+            rep.chunk_history, rep.batch_history, rep.total_time,
+            rep.decode_time, rep.total_tokens, rep.computed_tokens)
+
+
+# ---------------------------------------------------------------------------
+# engine refactor: run() == manual EngineCore stepping
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,chunk", [("elastic", None), ("fixed", 8)])
+def test_run_equals_core_stepping(mode, chunk):
+    reqs = list(PoissonWorkload(PROF, rate=3.0, n_requests=20, seed=21))
+
+    be1 = _backend(seed=21)
+    eng = ServingEngine(be1, _scheduler(be1, mode, chunk), max_batch=256)
+    rep_run = eng.run(reqs)
+
+    be2 = _backend(seed=21)
+    core = EngineCore(be2, _scheduler(be2, mode, chunk), max_batch=256)
+    core.submit_all(list(PoissonWorkload(PROF, rate=3.0, n_requests=20,
+                                         seed=21)))
+    while core.tick():
+        pass
+    rep_step = core.report()
+
+    assert _report_key(rep_run) == _report_key(rep_step)
+
+
+def test_incremental_submit_matches_bulk():
+    reqs = list(PoissonWorkload(PROF, rate=3.0, n_requests=15, seed=5))
+
+    be1 = _backend(seed=5)
+    c1 = EngineCore(be1, _scheduler(be1), max_batch=256)
+    c1.submit_all(reqs)
+    c1.drain()
+
+    be2 = _backend(seed=5)
+    c2 = EngineCore(be2, _scheduler(be2), max_batch=256)
+    for r in list(PoissonWorkload(PROF, rate=3.0, n_requests=15, seed=5)):
+        c2.submit(r)
+    c2.drain()
+
+    assert _report_key(c1.report()) == _report_key(c2.report())
+
+
+def test_priority_queue_does_not_starve_earlier_arrivals():
+    """A high-priority request with a far-future arrival must not make the
+    engine idle past an already-arrived low-priority one."""
+    from repro.serving import Request
+    be = _backend(seed=30)
+    core = EngineCore(be, _scheduler(be), max_batch=4)
+    early = Request(rid=0, arrival_time=1.0, prompt_len=64,
+                    max_new_tokens=32, priority=0)
+    late_hi = Request(rid=1, arrival_time=100.0, prompt_len=64,
+                      max_new_tokens=32, priority=1)
+    core.submit(early)
+    core.submit(late_hi)
+    assert core.next_event_time() == pytest.approx(1.0)
+    core.drain()
+    rep = core.report()
+    m = {x.rid: x for x in rep.metrics}
+    assert m[0].admit_time == pytest.approx(1.0)      # not 100.0
+    assert m[0].finish_time < 100.0
+    assert m[1].admit_time >= 100.0
+
+
+def test_core_next_event_time_progression():
+    be = _backend(seed=2)
+    core = EngineCore(be, _scheduler(be), max_batch=256)
+    assert core.next_event_time() == float("inf")
+    reqs = list(PoissonWorkload(PROF, rate=1.0, n_requests=3, seed=2))
+    core.submit_all(reqs)
+    t0 = core.next_event_time()
+    assert t0 == pytest.approx(reqs[0].arrival_time)
+    prev = 0.0
+    while core.tick():
+        t = core.clock.now()
+        assert t >= prev
+        prev = t
+    assert core.idle
+    assert core.next_event_time() == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# cluster: conservation + routing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("router", ["round_robin", "jsq", "saturation"])
+def test_cluster_completes_all_requests(router):
+    reqs = list(PoissonWorkload(PROF, rate=16.0, n_requests=60, seed=9))
+    cluster = ClusterEngine(_cores(3, seed=9), make_router(router))
+    rep = cluster.run(reqs)
+    assert len(rep.metrics) == 60
+    want = {r.rid: r.max_new_tokens for r in reqs}
+    got = {m.rid: m.n_tokens for m in rep.metrics}
+    assert got == want
+    assert sum(rep.route_counts) == 60
+    assert all(n > 0 for n in rep.route_counts)       # everyone got traffic
+    assert rep.makespan > 0 and rep.throughput > 0
+    assert len(rep.replica_utilization()) == 3
+    assert all(0.0 <= u <= 1.0 for u in rep.replica_utilization())
+
+
+def test_round_robin_cycles_evenly():
+    reqs = list(PoissonWorkload(PROF, rate=8.0, n_requests=40, seed=3))
+    cluster = ClusterEngine(_cores(4, seed=3), RoundRobinRouter())
+    rep = cluster.run(reqs)
+    assert rep.route_counts == [10, 10, 10, 10]
+
+
+def test_jsq_prefers_shorter_queue():
+    cores = _cores(2, seed=1)
+    # preload replica 0 with a standing request so JSQ must prefer replica 1
+    standing = list(PoissonWorkload(PROF, rate=1.0, n_requests=1, seed=8))[0]
+    cores[0].submit(standing)
+    router = JoinShortestQueueRouter()
+    assert router.rank(cores, None)[0] == 1
+
+
+def test_saturation_router_reads_scheduler_models():
+    cores = _cores(2, seed=4)
+    router = SaturationAwareRouter()
+    order = router.rank(cores, None)
+    assert sorted(order) == [0, 1]
+    # with a fixed scheduler (no latency/TU models) it falls back to JSQ
+    cores_fixed = _cores(2, seed=4, mode="fixed")
+    assert router.rank(cores_fixed, None) == [0, 1]
+
+
+def test_cluster_single_replica_matches_engine_run():
+    """A 1-replica cluster degenerates to the plain engine.  (Prefill is
+    excluded: the cluster hands over requests that arrive *during* a
+    replica's prefill clock-advance one decode step later than run()'s
+    in-pass admission, so exact equivalence holds for zero-cost prefill.)"""
+    reqs = list(PoissonWorkload(PROF, rate=4.0, n_requests=15, seed=6))
+
+    be = _backend(seed=6, include_prefill=False)
+    rep_engine = ServingEngine(be, _scheduler(be), max_batch=256).run(reqs)
+
+    be2 = _backend(seed=6, include_prefill=False)
+    cores = [EngineCore(be2, _scheduler(be2), max_batch=256)]
+    rep_cluster = ClusterEngine(cores, make_router("jsq")).run(
+        list(PoissonWorkload(PROF, rate=4.0, n_requests=15, seed=6)))
+
+    assert _report_key(rep_engine) == _report_key(rep_cluster.replica_reports[0])
+
+
+# ---------------------------------------------------------------------------
+# KV-pressure admission, spill-back, preemption
+# ---------------------------------------------------------------------------
+
+def test_kv_admission_spills_back_and_still_completes():
+    # ~534-token sharegpt requests = ~34 pages each; 128-page pools hold
+    # only ~3 requests, so a 30-request burst must spill and retry.
+    reqs = list(PoissonWorkload(PROF, rate=64.0, n_requests=30, seed=13,
+                                max_prompt=256, max_output=256))
+    cluster = ClusterEngine(_cores(2, seed=13, kv_pages=128),
+                            make_router("saturation"),
+                            admission=KVAdmissionPolicy(low_watermark=0.05))
+    rep = cluster.run(reqs)
+    assert len(rep.metrics) == 30
+    assert rep.spills > 0
+    assert {m.rid for m in rep.metrics} == {r.rid for r in reqs}
+
+
+def test_preemption_evicts_low_priority_for_high():
+    reqs = list(PoissonWorkload(PROF, rate=64.0, n_requests=30, seed=13,
+                                max_prompt=256, max_output=256))
+    for r in reqs:
+        r.priority = 1 if r.rid % 3 == 0 else 0
+    cluster = ClusterEngine(_cores(2, seed=13, kv_pages=128),
+                            make_router("saturation"),
+                            enable_preemption=True)
+    rep = cluster.run(reqs)
+    assert len(rep.metrics) == 30                 # evicted work still finishes
+    assert rep.preemptions > 0
+    preempted = [m for m in rep.metrics if m.preemptions > 0]
+    assert preempted
+    for m in preempted:                           # re-prefill happened
+        assert m.n_tokens > 0 and m.finish_time > m.arrival_time
+
+
+def test_oversized_requests_rejected_not_livelocked():
+    """A request bigger than every replica's whole KV pool must be refused
+    at dispatch, not spin the event loop forever."""
+    reqs = list(PoissonWorkload(PROF, rate=8.0, n_requests=10, seed=17,
+                                max_prompt=256, max_output=128))
+    reqs[3].prompt_len = 10_000            # 96-page pool = 1536 tokens max
+    cluster = ClusterEngine(_cores(2, seed=17, kv_pages=96),
+                            make_router("jsq"))
+    rep = cluster.run(reqs)
+    assert rep.rejected == [3]
+    assert len(rep.metrics) == 9           # everyone else completes
+    assert {m.rid for m in rep.metrics} == {r.rid for r in reqs} - {3}
+
+
+def test_admission_policy_reserves_pending_pages():
+    core = _cores(1, seed=0, kv_pages=64)[0]
+    pol = KVAdmissionPolicy(low_watermark=0.0)
+    reqs = list(PoissonWorkload(PROF, rate=1.0, n_requests=3, seed=1,
+                                max_prompt=256, max_output=256))
+    assert pol.admissible(core, reqs[0])
+    core.submit(reqs[0])                          # ~32 pages now reserved
+    assert pol.reserved_pages(core) > 0
+    admitted_more = pol.admissible(core, reqs[1])
+    core.submit(reqs[1])
+    assert not pol.admissible(core, reqs[2]) or admitted_more
+
+
+# ---------------------------------------------------------------------------
+# rate-varying traces
+# ---------------------------------------------------------------------------
+
+def test_rate_varying_arrivals_sorted_and_sized():
+    wl = RateVaryingWorkload(PROF, bursty_rate(4.0), 50, seed=3)
+    arr = [r.arrival_time for r in wl]
+    assert len(wl) == 50
+    assert all(b >= a for a, b in zip(arr, arr[1:]))
+    assert all(r.prompt_len >= 8 and r.max_new_tokens >= 4 for r in wl)
+
+
+def test_bursty_trace_is_burstier_than_poisson():
+    """Squared coefficient of variation of inter-arrivals: Poisson ≈ 1,
+    square-wave bursts substantially above."""
+    def cv2(reqs):
+        gaps = np.diff([r.arrival_time for r in reqs])
+        return float(np.var(gaps) / np.mean(gaps) ** 2)
+    po = list(make_trace(PROF, "poisson", 4.0, 400, seed=5))
+    bu = list(make_trace(PROF, "bursty", 4.0, 400, seed=5))
+    assert cv2(bu) > 1.4 * cv2(po)
+
+
+def test_diurnal_rate_shape():
+    rate = diurnal_rate(2.0, peak_ratio=3.0, period=100.0)
+    vals = [rate(t) for t in np.linspace(0, 100, 400, endpoint=False)]
+    assert max(vals) / min(vals) == pytest.approx(3.0, rel=0.01)
+    assert np.mean(vals) == pytest.approx(2.0, rel=0.01)   # normalized
+
+
+@pytest.mark.parametrize("rate_fn", [bursty_rate(4.0, period=30.0),
+                                     diurnal_rate(4.0, period=30.0)])
+def test_rate_varying_mean_rate_matches_nominal(rate_fn):
+    """The rate argument means the same offered load for every trace kind
+    (sampled over many periods so phase coverage is representative)."""
+    wl = RateVaryingWorkload(PROF, rate_fn, 800, seed=2)
+    reqs = list(wl)
+    span = reqs[-1].arrival_time - reqs[0].arrival_time
+    realized = (len(reqs) - 1) / span
+    assert realized == pytest.approx(4.0, rel=0.15)
+
+
+def test_make_trace_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        make_trace(PROF, "fractal", 1.0, 10)

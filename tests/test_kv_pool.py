@@ -1,0 +1,71 @@
+"""PagedKVAllocator: extend growth, exhaustion, and free-page reuse."""
+
+import pytest
+
+from repro.serving import OutOfPages, PagedKVAllocator
+
+
+def test_extend_grows_only_when_crossing_page_boundary():
+    kv = PagedKVAllocator(n_pages=16, page_size=16)
+    kv.allocate(0, 10)                       # 1 page
+    assert len(kv.block_table(0)) == 1
+    kv.extend(0, 16)                         # still 1 page
+    assert len(kv.block_table(0)) == 1
+    assert kv.length(0) == 16
+    kv.extend(0, 17)                         # crosses into page 2
+    assert len(kv.block_table(0)) == 2
+    kv.extend(0, 64)                         # 4 pages total
+    assert len(kv.block_table(0)) == 4
+    assert kv.free_pages == 12
+
+
+def test_extend_preserves_existing_pages():
+    kv = PagedKVAllocator(n_pages=8, page_size=16)
+    first = kv.allocate(0, 32)
+    grown = kv.extend(0, 48)
+    assert grown[:2] == first
+    assert len(grown) == 3
+
+
+def test_extend_raises_out_of_pages_and_leaves_table_intact():
+    kv = PagedKVAllocator(n_pages=4, page_size=16)
+    kv.allocate(0, 48)                       # 3 of 4 pages
+    before = kv.block_table(0)
+    with pytest.raises(OutOfPages):
+        kv.extend(0, 48 + 33)                # needs 2 more, only 1 free
+    assert kv.block_table(0) == before
+    assert kv.length(0) == 48
+    kv.extend(0, 64)                         # exactly the last page is fine
+    assert kv.free_pages == 0
+
+
+def test_allocate_exhaustion_and_can_admit():
+    kv = PagedKVAllocator(n_pages=4, page_size=16)
+    kv.allocate(0, 33)                       # 3 pages
+    assert kv.can_admit(16)
+    assert not kv.can_admit(17)
+    with pytest.raises(OutOfPages):
+        kv.allocate(1, 32)
+    assert 1 not in kv._tables               # failed alloc left no state
+    kv.allocate(1, 16)
+    assert kv.free_pages == 0
+    assert kv.utilization == 1.0
+
+
+def test_free_returns_pages_for_reuse():
+    kv = PagedKVAllocator(n_pages=4, page_size=16)
+    t0 = kv.allocate(0, 64)
+    assert kv.free_pages == 0
+    kv.free(0)
+    assert kv.free_pages == 4
+    t1 = kv.allocate(1, 64)                  # reuses the same physical pages
+    assert sorted(t1) == sorted(t0)
+    kv.free(1)
+    assert kv.free_pages == 4
+    assert kv.utilization == 0.0
+
+
+def test_free_unknown_rid_raises():
+    kv = PagedKVAllocator(n_pages=4, page_size=16)
+    with pytest.raises(KeyError):
+        kv.free(99)

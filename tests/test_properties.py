@@ -1,8 +1,12 @@
 """Hypothesis property tests on system invariants."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings        # noqa: E402
+from hypothesis import strategies as st       # noqa: E402
 
 from repro.core.chunked import ChunkedDecodeState
 from repro.core.diffusion import commit_decisions
