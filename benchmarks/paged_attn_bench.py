@@ -1,0 +1,153 @@
+"""Microbenchmark: paged chunk attention vs dense-cache chunk attention.
+
+Sweeps a (batch, chunk, ctx) grid and times three implementations of the
+per-iteration prefix-attention step of Optimus chunked decoding:
+
+* ``pallas``      — the Pallas chunked-paged-attention kernel
+                    (``interpret=True`` off-TPU: correctness path, wall
+                    time NOT TPU-representative);
+* ``ref``         — the pure-jnp paged oracle (gather pages → masked
+                    flash partials);
+* ``dense_flash`` — the dense-slot backend's path: ``flash_partial`` over
+                    a contiguous [B, S] cache (no page indirection but a
+                    full ``n_slots × max_len`` resident cache).
+
+Emits ``BENCH_paged_attn.json`` at the repo root (and a CSV next to the
+other benchmark outputs):
+
+    PYTHONPATH=src python -m benchmarks.paged_attn_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_JSON = os.path.join(REPO_ROOT, "BENCH_paged_attn.json")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+H, KVH, D, PAGE = 8, 2, 128, 16
+
+GRID = [  # (batch, chunk, ctx)
+    (1, 8, 256),
+    (4, 8, 256),
+    (4, 32, 256),
+    (16, 8, 512),
+    (16, 32, 512),
+    (64, 8, 1024),
+]
+QUICK_GRID = GRID[:3]
+
+
+def _sync(out):
+    (out[0] if isinstance(out, (tuple, list)) else out).block_until_ready()
+
+
+def _time(fn, reps: int) -> float:
+    _sync(fn())                                # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _sync(fn())
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_case(B: int, c: int, ctx: int, reps: int, interpret: bool):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops, ref
+    from repro.models.layers import flash_partial
+
+    rng = np.random.default_rng(0)
+    n_slots = -(-ctx // PAGE)
+    P = B * n_slots
+    S = n_slots * PAGE
+
+    q = jnp.asarray(rng.normal(size=(B, c, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(P, PAGE, KVH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P, PAGE, KVH, D)), jnp.float32)
+    tables = jnp.asarray(rng.permutation(P).reshape(B, n_slots), jnp.int32)
+    lens = jnp.full((B,), ctx, jnp.int32)
+
+    # dense contiguous cache (what the dense-slot ModelBackend attends over)
+    kc = jnp.asarray(np.asarray(kp[tables]).reshape(B, S, KVH, D))
+    vc = jnp.asarray(np.asarray(vp[tables]).reshape(B, S, KVH, D))
+    q_pos = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32) + ctx, (B, c))
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    import jax
+    ref_jit = jax.jit(ref.paged_chunk_ref)
+    dense_jit = jax.jit(lambda q_, kc_, vc_, lens_: flash_partial(
+        q_, kc_, vc_, q_pos=q_pos, k_pos=k_pos,
+        k_valid=k_pos < lens_[:, None], kind="all"))
+
+    times = {
+        "pallas": _time(lambda: ops.paged_chunk_attention(
+            q, kp, vp, tables, lens, interpret=interpret), reps),
+        "ref": _time(lambda: ref_jit(q, kp, vp, tables, lens), reps),
+        "dense_flash": _time(lambda: dense_jit(q, kc, vc, lens), reps),
+    }
+    # correctness tie-in: all three agree on the partials
+    acc_p, m_p, l_p = ops.paged_chunk_attention(q, kp, vp, tables, lens,
+                                                interpret=interpret)
+    acc_r, _, _ = ref_jit(q, kp, vp, tables, lens)
+    rel = float(jnp.max(jnp.abs(acc_p - acc_r))) / \
+        (float(jnp.max(jnp.abs(acc_r))) + 1e-9)
+    return times, rel
+
+
+def run_grid(quick: bool = False, reps: int = 3, verbose: bool = True):
+    """Sweep the grid and write BENCH_paged_attn.json (+ CSV).  Single
+    owner of the sweep/schema — ``benchmarks.run --only paged_attn``
+    delegates here.  Returns the result rows."""
+    import jax
+    interpret = jax.default_backend() != "tpu"
+    rows = []
+    for B, c, ctx in (QUICK_GRID if quick else GRID):
+        times, rel = bench_case(B, c, ctx, reps, interpret)
+        rows.append({"batch": B, "chunk": c, "ctx": ctx,
+                     "page_size": PAGE, "max_rel_err_vs_ref": rel,
+                     **{f"{k}_ms": v * 1e3 for k, v in times.items()}})
+        if verbose:
+            print(f"B={B:3d} c={c:3d} ctx={ctx:5d}  " +
+                  "  ".join(f"{k}={v*1e3:8.2f}ms"
+                            for k, v in times.items()) +
+                  f"  rel_err={rel:.2e}")
+
+    payload = {
+        "bench": "paged_attn",
+        "backend": jax.default_backend(),
+        "pallas_interpret": interpret,
+        "note": ("interpret-mode Pallas timing is a correctness path, not "
+                 "TPU wall time; dense_flash is the dense-slot baseline"),
+        "shapes": {"heads": H, "kv_heads": KVH, "head_dim": D,
+                   "page_size": PAGE},
+        "results": rows,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    import csv
+    with open(os.path.join(OUT_DIR, "paged_attn_bench.csv"), "w",
+              newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    run_grid(quick=args.quick, reps=args.reps)
+    print(f"wrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    main()

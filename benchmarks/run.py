@@ -481,6 +481,18 @@ def cluster(quick=False):
     cluster_sweep(quick=quick)
 
 
+def paged_attn(quick=False):
+    """Paged vs dense chunk-attention microbenchmark → BENCH_paged_attn.json
+    (see benchmarks/paged_attn_bench)."""
+    from benchmarks.paged_attn_bench import run_grid
+    rows = run_grid(quick=quick, verbose=False)
+    mid = rows[min(1, len(rows) - 1)]
+    emit("paged_attn.ref_over_dense_flash",
+         f"{mid['ref_ms']/mid['dense_flash_ms']:.2f}x",
+         f"B={mid['batch']} c={mid['chunk']} ctx={mid['ctx']}; "
+         "full grid in BENCH_paged_attn.json")
+
+
 ALL = {
     "table2": table2_profiles,
     "fig1": fig1_load_sensitivity,
@@ -495,6 +507,7 @@ ALL = {
     "fig13": fig13_ablation,
     "kernels": bench_kernels,
     "cluster": cluster,
+    "paged_attn": paged_attn,
 }
 
 

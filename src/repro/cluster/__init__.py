@@ -5,7 +5,8 @@ event loop over steppable :class:`~repro.serving.engine.EngineCore` replicas.
 
 from repro.cluster.admission import KVAdmissionPolicy, fits_ever, kv_tokens
 from repro.cluster.engine import ClusterEngine
-from repro.cluster.factory import build_sim_cluster, make_replica_scheduler
+from repro.cluster.factory import (build_model_cluster, build_sim_cluster,
+                                   make_replica_scheduler)
 from repro.cluster.router import (ROUTERS, JoinShortestQueueRouter,
                                   RoundRobinRouter, SaturationAwareRouter,
                                   make_router)
@@ -13,5 +14,6 @@ from repro.cluster.router import (ROUTERS, JoinShortestQueueRouter,
 __all__ = [
     "ClusterEngine", "KVAdmissionPolicy", "fits_ever", "kv_tokens",
     "RoundRobinRouter", "JoinShortestQueueRouter", "SaturationAwareRouter",
-    "ROUTERS", "make_router", "build_sim_cluster", "make_replica_scheduler",
+    "ROUTERS", "make_router", "build_sim_cluster", "build_model_cluster",
+    "make_replica_scheduler",
 ]

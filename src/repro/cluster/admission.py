@@ -22,14 +22,16 @@ def kv_tokens(req: Request) -> int:
 
 def fits_ever(core, req: Request) -> bool:
     """Whether the request could be admitted on an *empty* replica — a
-    request bigger than the whole KV pool (or model slot length) would
-    otherwise queue forever and live-lock the event loop."""
+    request bigger than the whole KV pool (or model context length) would
+    otherwise queue forever and live-lock the event loop.  Paged model
+    backends carry *both* bounds (allocator pages and per-request
+    ``max_len``), so the checks compose."""
     kv = getattr(core.backend, "kv", None)
-    if kv is not None:
-        return kv.pages_for(kv_tokens(req)) <= kv.n_pages
+    if kv is not None and kv.pages_for(kv_tokens(req)) > kv.n_pages:
+        return False
     max_len = getattr(core.backend, "max_len", None)
-    if max_len is not None:
-        return kv_tokens(req) <= max_len
+    if max_len is not None and kv_tokens(req) > max_len:
+        return False
     return True
 
 
@@ -50,8 +52,10 @@ class KVAdmissionPolicy:
     def admissible(self, core, req: Request) -> bool:
         kv = getattr(core.backend, "kv", None)
         if kv is None:
-            # Slot-based backends (ModelBackend): queue if the request can
-            # ever fit; the engine-level can_admit gate does the rest.
+            # Dense-slot ModelBackend (no allocator): queue if the request
+            # can ever fit; the engine-level can_admit gate does the rest.
+            # Sim and paged model backends both expose ``.kv`` and take the
+            # page-reservation branch below — one KV-pressure signal.
             return core.backend.can_admit(req) or core.n_active > 0
         need = kv.pages_for(kv_tokens(req))
         headroom = kv.free_pages - self.reserved_pages(core) - need

@@ -1,9 +1,12 @@
-"""Shared construction of simulated clusters.
+"""Shared construction of simulated and real-model clusters.
 
 The launcher, benchmark sweep, and example all build the same thing: N
-`SimBackend` replicas (per-replica RNG seed and KV pool) with per-replica
-schedulers, wrapped in a :class:`ClusterEngine`.  One factory keeps their
-replica seeding, scheduler profiling, and admission defaults in lock-step.
+backend replicas with per-replica schedulers, wrapped in a
+:class:`ClusterEngine`.  One factory keeps their replica seeding,
+scheduler profiling, and admission defaults in lock-step.  Since the KV
+layer was unified, sim and (paged) model replicas expose the same
+allocator-backed ``.kv`` pressure signal, so the same
+:class:`KVAdmissionPolicy` drives both.
 """
 
 from __future__ import annotations
@@ -11,9 +14,9 @@ from __future__ import annotations
 from repro.cluster.admission import KVAdmissionPolicy
 from repro.cluster.engine import ClusterEngine
 from repro.cluster.router import make_router
-from repro.core.latency_model import TPU_V5E
+from repro.core.latency_model import CPU_HOST, TPU_V5E, AnalyticDeviceModel
 from repro.core.scheduler import scheduler_for_mode
-from repro.serving import EngineCore, SimBackend
+from repro.serving import EngineCore, ModelBackend, SimBackend
 
 
 def make_replica_scheduler(backend, profile, mode: str = "elastic"):
@@ -41,6 +44,38 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                         decode_mode="ar" if mode == "ar" else "elastic",
                         kv_pool_pages=kv_pages, seed=seed + 1000 * i)
         sch = make_replica_scheduler(be, profile, mode)
+        replicas.append(EngineCore(be, sch, max_batch=max_batch))
+    return ClusterEngine(replicas, router,
+                         admission=KVAdmissionPolicy(
+                             low_watermark=kv_watermark),
+                         enable_preemption=preemption)
+
+
+def build_model_cluster(model, params, n_replicas: int, router, *, profile,
+                        mode: str = "elastic", paged: bool = True,
+                        n_slots: int = 8, max_len: int = 128,
+                        kv_pages: int | None = None,
+                        page_size: int | None = None, max_batch: int = 64,
+                        kv_watermark: float = 0.05,
+                        preemption: bool = False) -> ClusterEngine:
+    """N real-model replicas (shared params, per-replica KV pool) under one
+    ClusterEngine.  With ``paged=True`` every replica admits by allocator
+    pages, so :class:`KVAdmissionPolicy` reads the identical free-page /
+    reservation signal it reads from SimBackend replicas."""
+    if isinstance(router, str):
+        router = make_router(router)
+    replicas = []
+    for _ in range(n_replicas):
+        be = ModelBackend(model, params, n_slots=n_slots, max_len=max_len,
+                          decode_mode="ar" if mode == "ar" else "elastic",
+                          paged=paged, kv_pages=kv_pages,
+                          page_size=page_size)
+        sch = scheduler_for_mode(
+            mode, AnalyticDeviceModel(model.cfg, CPU_HOST),
+            prior_tokens_per_step=profile.tokens_per_step_bd32,
+            batches=(1, 2, 4, 8, 16), ctx=float(max_len)) \
+            if mode == "elastic" else scheduler_for_mode(
+                mode, prior_tokens_per_step=profile.tokens_per_step_bd32)
         replicas.append(EngineCore(be, sch, max_batch=max_batch))
     return ClusterEngine(replicas, router,
                          admission=KVAdmissionPolicy(

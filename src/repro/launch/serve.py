@@ -41,6 +41,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--obs", action="store_true",
                     help="out-block streaming for large chunks")
+    ap.add_argument("--paged", action="store_true",
+                    help="model backend: paged KV pool + Pallas paged-"
+                         "attention path (page-bounded admission)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -60,7 +63,8 @@ def main():
         params = model.init(jax.random.PRNGKey(0))
         backend = ModelBackend(model, params, n_slots=8, max_len=256,
                                decode_mode="ar" if args.mode == "ar"
-                               else "elastic", obs=args.obs)
+                               else "elastic", obs=args.obs,
+                               paged=args.paged)
         import numpy as np
         rng = np.random.default_rng(args.seed)
         wl = PoissonWorkload(profile, args.rate, args.requests,

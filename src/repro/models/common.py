@@ -61,6 +61,10 @@ class ArchConfig:
     block_size: int = 32
     mask_token_id: int = 3         # reserved mask-token id
     confidence_threshold: float = 0.9
+    # serving KV-cache dispatch -------------------------------------------
+    paged_kv: bool = False         # serve through the paged KV pool
+    kv_page_size: int = 16         # tokens per KV page
+    paged_attn_impl: str = "kernel"  # kernel (Pallas; interpret off-TPU) | ref
     # dtypes --------------------------------------------------------------
     param_dtype: str = "float32"
     compute_dtype: str = "float32"

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
+from repro.kernels import ref as kernel_ref
+from repro.kernels.chunked_paged_attn import paged_chunk_attention_kernel
 from repro.models import ssm
 from repro.models.common import (ArchConfig, KeyGen, dense_init_a,
                                  embed_init_a)
@@ -82,6 +84,35 @@ def _scatter_kv(cache_kv, new_kv, idx):
                      new_kv.astype(cache_kv.dtype))
     written = jnp.any(oh, axis=1)                              # [B,S]
     return jnp.where(written[None, :, :, None, None], upd, cache_kv)
+
+
+def _page_dest(block_tables, positions, keep, page_size: int, n_pages: int):
+    """Flat page-pool destinations [B,T] for absolute token positions.
+
+    ``keep`` masks live entries; everything else maps to the out-of-bounds
+    sentinel ``n_pages * page_size`` so the scatter drops it.  Page indices
+    are clipped into the table so padded rows (table width > pages owned)
+    never index out of bounds — their ``keep`` is False anyway.
+    """
+    W = block_tables.shape[1]
+    pidx = jnp.clip(positions // page_size, 0, W - 1)
+    page = jnp.take_along_axis(block_tables, pidx, axis=1)
+    return jnp.where(keep, page * page_size + positions % page_size,
+                     n_pages * page_size)
+
+
+def _scatter_pages(pages, new, dest):
+    """pages [L,P,ps,KVH,hd] ← new [L,B,T,KVH,hd] at flat dest [B,T].
+
+    Token-granular scatter into the paged pool.  Distinct live destinations
+    never collide (each (page, offset) is owned by one request position);
+    dropped entries all share the OOB sentinel.
+    """
+    L, P, ps, KVH, hd = pages.shape
+    flat = pages.reshape(L, P * ps, KVH, hd)
+    flat = flat.at[:, dest.reshape(-1)].set(
+        new.astype(pages.dtype).reshape(L, -1, KVH, hd), mode="drop")
+    return flat.reshape(L, P, ps, KVH, hd)
 
 
 class TransformerLM:
@@ -217,6 +248,21 @@ class TransformerLM:
                 parts.append(flash_partial(
                     q, kc, vc, q_pos=pos1d, k_pos=k_pos,
                     k_valid=k_pos < shared["cache_len"][:, None], kind="all"))
+            if "page_k" in lx:
+                # paged prefix: block-table-indirected flash partial over the
+                # page pool (Pallas chunked-paged-attention kernel, or the
+                # pure-jnp oracle when paged_attn_impl == "ref")
+                kp = lx["page_k"].astype(cfg.cdt)
+                vp = lx["page_v"].astype(cfg.cdt)
+                if shared["paged_impl"] == "ref":
+                    parts.append(kernel_ref.paged_chunk_ref(
+                        q, kp, vp, shared["block_tables"],
+                        shared["ctx_lens"]))
+                else:
+                    parts.append(paged_chunk_attention_kernel(
+                        q, kp, vp, shared["block_tables"],
+                        shared["ctx_lens"],
+                        interpret=shared["paged_interpret"]))
             if "self_flash" in shared:
                 sf = shared["self_flash"]
                 B, T = pos1d.shape
@@ -391,6 +437,8 @@ class TransformerLM:
             name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
             if name in ("k", "v"):
                 return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+            if name in ("k_pages", "v_pages"):   # page pool is replicated
+                return ("layers", None, None, "kv_heads", "head_dim")
             if name == "len":
                 return ("batch",)
             if name == "wkv":
@@ -508,6 +556,120 @@ class TransformerLM:
             new_cache["v"] = _scatter_kv(cache["v"], win_kv["v"], idx)
         new_cache["len"] = cache["len"] + n_adv.astype(jnp.int32)
         return new_cache
+
+    # -- paged serving ---------------------------------------------------
+    #
+    # The paged cache variant replaces the dense per-slot [L,B,S,KVH,hd]
+    # arrays with a block-table-indirected page pool [L,P,ps,KVH,hd] shared
+    # by every in-flight request (NanoFlow-style: capacity is bounded by
+    # pages, not slots).  Supported for attention-only families
+    # (dense/moe/vlm); recurrent families keep the dense-slot path.
+
+    PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+    def supports_paged(self) -> bool:
+        return self.cfg.family in self.PAGED_FAMILIES and self.has_kv
+
+    def _check_paged(self):
+        if not self.supports_paged():
+            raise ValueError(
+                f"paged KV serving needs an attention-only family "
+                f"(got {self.cfg.family!r})")
+
+    def paged_kv_dims(self) -> tuple[int, int, int]:
+        """(n_kv_layers, n_kv_heads, head_dim) — the model-derived half of
+        the page-pool shape.  Single source for both
+        :meth:`init_paged_cache` and ``PagedKVAllocator.init_storage``."""
+        return (self.n_periods * len(self.attn_positions()),
+                self.cfg.n_kv_heads, self.cfg.hd)
+
+    def init_paged_cache(self, n_pages: int, page_size: int | None = None,
+                         dtype=jnp.float32):
+        """Page-pool cache: {'k_pages','v_pages'} [L,P,ps,KVH,hd] (the same
+        arrays ``PagedKVAllocator.init_storage`` owns in serving)."""
+        self._check_paged()
+        ps = page_size if page_size is not None else self.cfg.kv_page_size
+        L, KVH, hd = self.paged_kv_dims()
+        shp = (L, n_pages, ps, KVH, hd)
+        return {"k_pages": jnp.zeros(shp, dtype),
+                "v_pages": jnp.zeros(shp, dtype)}
+
+    def prefill_paged(self, params, cache, tokens, lengths, block_tables,
+                      mm_embeds=None, mm_mask=None):
+        """Batched prompt forward writing KV into the page pool.
+
+        tokens [B,T] (row-padded), lengths [B], block_tables [B,W] int32.
+        Returns (last-valid-position logits [B,V], new page cache) — the
+        whole admission wave runs as ONE forward, unlike the dense path's
+        sequential per-slot prefill.
+        """
+        self._check_paged()
+        cfg = self.cfg
+        B, T = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        mask_mode = "block_causal" if cfg.diffusion else "causal"
+        shared = {"self_flash": {"kind": mask_mode, "lengths": lengths,
+                                 "aligned": True}}
+        x = self.embed(params, tokens, mm_embeds, mm_mask)
+        x, kvs, _ = self._stack(params, x, positions, shared, {})
+        idx = jnp.clip(lengths - 1, 0, T - 1)
+        xl = jnp.take_along_axis(
+            x, idx[:, None, None].astype(jnp.int32), axis=1)
+        logits = self.head(params, xl)[:, 0]
+        kv = self._collect_kv(kvs)
+        P, ps = cache["k_pages"].shape[1], cache["k_pages"].shape[2]
+        keep = positions < lengths[:, None]
+        dest = _page_dest(block_tables, positions, keep, ps, P)
+        return logits, {
+            "k_pages": _scatter_pages(cache["k_pages"], kv["k"], dest),
+            "v_pages": _scatter_pages(cache["v_pages"], kv["v"], dest)}
+
+    def chunk_forward_paged(self, params, cache, win_tokens, win_start,
+                            win_valid, block_tables, ctx_lens, *,
+                            impl: str = "kernel", interpret=None,
+                            mm_embeds=None, mm_mask=None):
+        """Diffusion-window forward against the paged prefix cache.
+
+        Same contract as :meth:`chunk_forward`, but the frozen prefix is
+        read through block tables: ``impl='kernel'`` runs the Pallas
+        chunked-paged-attention kernel (interpret mode off-TPU),
+        ``impl='ref'`` the pure-jnp oracle.  ctx_lens [B] is the committed
+        prefix length per row (0 for padded rows — their paged partial is
+        empty and the in-window diagonal keeps logits finite).
+        """
+        self._check_paged()
+        B, c = win_tokens.shape
+        offs = jnp.arange(c, dtype=jnp.int32)
+        positions = win_start[:, None] + offs[None, :]
+        valid = offs[None, :] < win_valid[:, None]
+        shared = self._window_masks(cache, positions, valid, c)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        shared.update(block_tables=block_tables.astype(jnp.int32),
+                      ctx_lens=ctx_lens.astype(jnp.int32),
+                      paged_impl=impl, paged_interpret=interpret)
+        per_layer = {f"pos{j}": {"page_k": cache["k_pages"],
+                                 "page_v": cache["v_pages"]}
+                     for j in self.attn_positions()}
+        x = self.embed(params, win_tokens, mm_embeds, mm_mask)
+        x, kvs, _ = self._stack(params, x, positions, shared, per_layer)
+        logits = self.head(params, x)
+        return logits, self._collect_kv(kvs)
+
+    def freeze_paged(self, cache, win_kv, block_tables, win_start, n_adv):
+        """Write the first n_adv[b] window KV entries into the page pool
+        (the paged counterpart of :meth:`freeze`; 'len' lives with the
+        caller's decode state, not in the cache)."""
+        c = win_kv["k"].shape[2]
+        P, ps = cache["k_pages"].shape[1], cache["k_pages"].shape[2]
+        offs = jnp.arange(c, dtype=jnp.int32)
+        pos = win_start[:, None] + offs[None, :]
+        keep = offs[None, :] < n_adv[:, None]
+        dest = _page_dest(block_tables, pos, keep, ps, P)
+        return {"k_pages": _scatter_pages(cache["k_pages"], win_kv["k"],
+                                          dest),
+                "v_pages": _scatter_pages(cache["v_pages"], win_kv["v"],
+                                          dest)}
 
     def advance_states(self, params, cache, tokens, lengths,
                        mm_embeds=None, mm_mask=None):

@@ -5,9 +5,11 @@
   device model.  This reproduces the paper's serving-scale experiments
   deterministically on CPU.
 * :class:`ModelBackend` — real-model backend: a (tiny) JAX model runs
-  end-to-end; commits come from actual softmax confidences.  Used by the
-  examples and integration tests (and, on real TPUs, by production serving
-  with the Pallas chunked-paged-attention kernel swapped in).
+  end-to-end; commits come from actual softmax confidences.  With
+  ``paged=True`` it serves through the unified paged KV pool and the
+  Pallas chunked-paged-attention kernel (compiled on TPU, interpret/ref
+  path on CPU); ``paged=False`` keeps the legacy dense-slot cache for one
+  release.
 
 Both expose the same protocol:
     can_admit(request)        -> bool
@@ -192,19 +194,35 @@ class SimBackend:
 # ===========================================================================
 
 class ModelBackend:
-    """Batched-slot real-model backend (decoder-only families).
+    """Real-model backend (decoder-only families), dense-slot or paged.
 
-    All occupied slots advance together each iteration with the
-    scheduler-chosen chunk size; idle slots are masked via win_valid = 0.
-    Hybrid block commits and rwkv AR steps run through ``advance_states``
-    with a masked state-merge so inactive slots' recurrent states are
-    untouched.  Encoder–decoder serving is exercised through SimBackend and
-    model-level tests.
+    **Dense-slot mode** (``paged=False``, deprecated — kept for one
+    release): a fixed ``n_slots``-row KV cache; all occupied slots advance
+    together each iteration with the scheduler-chosen chunk size; idle
+    slots are masked via win_valid = 0.  Hybrid block commits and rwkv AR
+    steps run through ``advance_states`` with a masked state-merge so
+    inactive slots' recurrent states are untouched.
+
+    **Paged mode** (``paged=True``; attention-only families): committed KV
+    lives in a :class:`PagedKVAllocator`-owned page pool read through block
+    tables by the Pallas chunked-paged-attention kernel (interpret mode /
+    ``ref`` oracle on CPU).  Admission is page-bounded (``can_admit`` asks
+    the allocator, not a slot list) so batch size is limited only by the
+    engine's ``max_batch`` and KV pages — the same memory-elastic semantics
+    as :class:`SimBackend`, giving cluster admission and the saturation
+    router one consistent KV-pressure signal.  Admitted prompts are
+    *batch-prefilled* in one forward, deferred to the next decode step (an
+    AR request therefore gets its prefill-derived first token at the end of
+    the first decode iteration instead of at admit time).
     """
 
     def __init__(self, model, params, n_slots: int = 8, max_len: int = 512,
                  decode_mode: str = "elastic", obs: bool = False,
-                 cache_dtype=np.float32):
+                 cache_dtype=np.float32, paged: bool | None = None,
+                 kv_pages: int | None = None, page_size: int | None = None,
+                 attn_impl: str | None = None, interpret: bool | None = None):
+        import functools
+
         import jax
         import jax.numpy as jnp
         self.jax, self.jnp = jax, jnp
@@ -215,17 +233,45 @@ class ModelBackend:
         self.max_len = max_len
         self.decode_mode = decode_mode
         self.obs = obs
-        self.cache = model.init_cache(n_slots, max_len, dtype=cache_dtype)
-        self._slot_of: dict[int, int] = {}
-        self._free_slots = list(range(n_slots - 1, -1, -1))
+        self.paged = self.cfg.paged_kv if paged is None else paged
         self._states: dict[int, object] = {}
         self._req: dict[int, Request] = {}
 
-        self._chunk_fwd = jax.jit(model.chunk_forward)
-        self._freeze = jax.jit(model.freeze)
-        self._advance = jax.jit(model.advance_states)
-        self._prefill = jax.jit(self._prefill_impl)
-        self._merge = jax.jit(self._merge_impl)
+        if self.paged:
+            model._check_paged()
+            ps = page_size if page_size is not None else self.cfg.kv_page_size
+            if kv_pages is None:
+                # mirror the dense cache's capacity by default so
+                # paged=True is a drop-in swap at equal memory
+                kv_pages = n_slots * (-(-max_len // ps))
+            self.kv = PagedKVAllocator(kv_pages, ps)
+            self.kv.init_storage(*model.paged_kv_dims(), dtype=cache_dtype)
+            self._table_width = self.kv.pages_for(max_len)
+            self._pending_prefill: list[Request] = []
+            impl = attn_impl if attn_impl is not None \
+                else self.cfg.paged_attn_impl
+            self._prefill_paged = jax.jit(model.prefill_paged)
+            self._chunk_paged = jax.jit(functools.partial(
+                model.chunk_forward_paged, impl=impl, interpret=interpret))
+            self._freeze_paged = jax.jit(model.freeze_paged)
+        else:
+            self.kv = None
+            self.cache = model.init_cache(n_slots, max_len, dtype=cache_dtype)
+            self._slot_of: dict[int, int] = {}
+            self._free_slots = list(range(n_slots - 1, -1, -1))
+            self._chunk_fwd = jax.jit(model.chunk_forward)
+            self._freeze = jax.jit(model.freeze)
+            self._advance = jax.jit(model.advance_states)
+            self._prefill = jax.jit(self._prefill_impl)
+            self._merge = jax.jit(self._merge_impl)
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        """Next power of two ≥ n — bounds jit retraces across batch sizes."""
+        b = 1
+        while b < n:
+            b *= 2
+        return b
 
     # -- jit bodies ------------------------------------------------------
     def _prefill_impl(self, params, cache, tokens, length, slot):
@@ -263,26 +309,37 @@ class ModelBackend:
 
     # ------------------------------------------------------------------
     def can_admit(self, req: Request) -> bool:
-        return bool(self._free_slots) and \
-            req.prompt_len + req.max_new_tokens <= self.max_len
+        total = req.prompt_len + req.max_new_tokens
+        if total > self.max_len:
+            return False
+        if self.paged:
+            return self.kv.can_admit(total)
+        return bool(self._free_slots)
+
+    def _make_state(self, req: Request):
+        mode = _decode_mode_for(self.cfg, self.decode_mode)
+        if mode == "ar":
+            return ARState(req.prompt_len, req.max_new_tokens, req.eos_token)
+        return ChunkedDecodeState(
+            prompt_len=req.prompt_len, max_new_tokens=req.max_new_tokens,
+            block_size=self.cfg.block_size,
+            threshold=self.cfg.confidence_threshold,
+            mask_token=self.cfg.mask_token_id, eos_token=req.eos_token,
+            mode=mode, obs=self.obs)
 
     def admit(self, req: Request) -> float:
+        self._req[req.rid] = req
+        self._states[req.rid] = st = self._make_state(req)
+        if self.paged:
+            # reserve pages now; the prefill forward itself is deferred and
+            # batched with every other admission of this engine iteration
+            self.kv.allocate(req.rid, req.prompt_len + req.max_new_tokens)
+            self._pending_prefill.append(req)
+            return 0.0
+
         jnp = self.jnp
         slot = self._free_slots.pop()
         self._slot_of[req.rid] = slot
-        self._req[req.rid] = req
-        mode = _decode_mode_for(self.cfg, self.decode_mode)
-        if mode == "ar":
-            st = ARState(req.prompt_len, req.max_new_tokens, req.eos_token)
-        else:
-            st = ChunkedDecodeState(
-                prompt_len=req.prompt_len, max_new_tokens=req.max_new_tokens,
-                block_size=self.cfg.block_size,
-                threshold=self.cfg.confidence_threshold,
-                mask_token=self.cfg.mask_token_id, eos_token=req.eos_token,
-                mode=mode, obs=self.obs)
-        self._states[req.rid] = st
-
         toks = np.zeros(self.max_len, np.int32)
         pt = np.asarray(req.prompt_tokens, np.int32)
         toks[:len(pt)] = pt
@@ -298,7 +355,28 @@ class ModelBackend:
         return 0.0
 
     def release(self, rid: int):
-        self._free_slots.append(self._slot_of.pop(rid))
+        if self.paged:
+            self._pending_prefill = [r for r in self._pending_prefill
+                                     if r.rid != rid]
+            self.kv.free(rid)
+            self._states.pop(rid)
+            self._req.pop(rid)
+            return
+        slot = self._slot_of.pop(rid)
+        # Recycle hygiene: zero the slot's context length and re-init its
+        # recurrent states so no later batched step can observe a stale
+        # ctx_len / carried state through the freed slot.  (Slot k/v rows
+        # are fully overwritten by the next prefill, so they can stay.)
+        self.cache = dict(self.cache)
+        self.cache["len"] = self.cache["len"].at[slot].set(0)
+        if "states" in self.cache:
+            fresh = {k: v["state"]
+                     for k, v in self.model._state_xs(1, self.cfg.cdt).items()}
+            self.cache["states"] = self.jax.tree.map(
+                lambda full, new: full.at[:, slot].set(
+                    new[:, 0].astype(full.dtype)),
+                self.cache["states"], fresh)
+        self._free_slots.append(slot)
         self._states.pop(rid)
         self._req.pop(rid)
 
@@ -369,10 +447,150 @@ class ModelBackend:
             st.commit(int(tok))
             infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
 
+    # -- paged-mode steps -------------------------------------------------
+    def _pages_cache(self):
+        return {"k_pages": self.kv.k_pages, "v_pages": self.kv.v_pages}
+
+    def _store_pages(self, pages):
+        self.kv.k_pages = pages["k_pages"]
+        self.kv.v_pages = pages["v_pages"]
+
+    def _batch_arrays(self, rids):
+        """Bucketed (tables, ctx) host arrays for a decode batch; padded
+        rows get table 0 / ctx 0 — never read thanks to ctx_lens masking."""
+        B = len(rids)
+        Bp = self._bucket(B)
+        tables = np.zeros((Bp, self._table_width), np.int32)
+        tables[:B] = self.kv.batch_tables(rids, self._table_width)
+        ctx = np.zeros(Bp, np.int64)
+        for i, rid in enumerate(rids):
+            st = self._states[rid]
+            ctx[i] = st.prompt_len + st.frozen
+        return Bp, tables, ctx
+
+    def _flush_prefills(self):
+        """Run every deferred admission as ONE batched prefill forward."""
+        if not self._pending_prefill:
+            return
+        jnp = self.jnp
+        reqs, self._pending_prefill = self._pending_prefill, []
+        B = len(reqs)
+        Bp = self._bucket(B)
+        Tp = self._bucket(max(r.prompt_len for r in reqs))
+        toks = np.zeros((Bp, Tp), np.int32)
+        lens = np.zeros(Bp, np.int64)
+        tables = np.zeros((Bp, self._table_width), np.int32)
+        tables[:B] = self.kv.batch_tables([r.rid for r in reqs],
+                                          self._table_width)
+        for i, r in enumerate(reqs):
+            toks[i, :r.prompt_len] = np.asarray(r.prompt_tokens, np.int32)
+            lens[i] = r.prompt_len
+        last_logits, pages = self._prefill_paged(
+            self.params, self._pages_cache(), jnp.asarray(toks),
+            jnp.asarray(lens, jnp.int32), jnp.asarray(tables))
+        self._store_pages(pages)
+        last_logits = np.asarray(last_logits)
+        for i, r in enumerate(reqs):
+            st = self._states[r.rid]
+            if isinstance(st, ARState):
+                _, tok = softmax_confidence(last_logits[i])
+                st.commit(int(tok))
+
+    def _step_ar_paged(self, ar_rids, infos):
+        """AR decode over the page pool: c=1 window at the last committed
+        token, prefix = everything before it (ctx = len-1)."""
+        jnp = self.jnp
+        Bp, tables, ctx = self._batch_arrays(ar_rids)
+        win = np.full((Bp, 1), self.cfg.mask_token_id, np.int64)
+        start = np.zeros(Bp, np.int64)
+        valid = np.zeros(Bp, np.int64)
+        n_adv = np.zeros(Bp, np.int64)
+        for i, rid in enumerate(ar_rids):
+            st = self._states[rid]
+            win[i, 0] = st.committed[st.frozen - 1]
+            start[i] = st.prompt_len + st.frozen - 1
+            ctx[i] = start[i]
+            valid[i] = 1
+            n_adv[i] = 1
+        cache = self._pages_cache()
+        logits, win_kv = self._chunk_paged(
+            self.params, cache, jnp.asarray(win, jnp.int32),
+            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+            jnp.asarray(tables), jnp.asarray(ctx, jnp.int32))
+        if win_kv is not None:
+            self._store_pages(self._freeze_paged(
+                cache, win_kv, jnp.asarray(tables),
+                jnp.asarray(start, jnp.int32), jnp.asarray(n_adv, jnp.int32)))
+        logits = np.asarray(logits)
+        for i, rid in enumerate(ar_rids):
+            st = self._states[rid]
+            _, tok = softmax_confidence(logits[i, 0])
+            st.commit(int(tok))
+            infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
+
+    def _step_diffusion_paged(self, diff_rids, chunk, infos):
+        jnp = self.jnp
+        c = chunk
+        Bp, tables, ctx = self._batch_arrays(diff_rids)
+        win = np.full((Bp, c), self.cfg.mask_token_id, np.int64)
+        start = np.zeros(Bp, np.int64)
+        valid = np.zeros(Bp, np.int64)
+        meta = {}
+        for i, rid in enumerate(diff_rids):
+            st = self._states[rid]
+            toks, s, v, cai = st.window(c)
+            win[i, :len(toks)] = toks
+            start[i] = s
+            valid[i] = v
+            meta[rid] = (cai, v, i)
+        cache = self._pages_cache()
+        logits, win_kv = self._chunk_paged(
+            self.params, cache, jnp.asarray(win, jnp.int32),
+            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+            jnp.asarray(tables), jnp.asarray(ctx, jnp.int32))
+        logits = np.asarray(logits)
+        n_adv_arr = np.zeros(Bp, np.int64)
+        for rid in diff_rids:
+            st = self._states[rid]
+            cai, v, i = meta[rid]
+            conf, tok = softmax_confidence(logits[i, :c])
+            commit_mask, n_adv = st.apply_step(conf, tok, v, cai)
+            n_adv_arr[i] = n_adv
+            st.advance(n_adv)
+            infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask, v,
+                                  st.done)
+        if win_kv is not None and n_adv_arr.any():
+            self._store_pages(self._freeze_paged(
+                cache, win_kv, jnp.asarray(tables),
+                jnp.asarray(start, jnp.int32),
+                jnp.asarray(n_adv_arr, jnp.int32)))
+
+    def _split_ar(self, rids, infos):
+        """Partition rids into (live AR, diffusion); AR requests already
+        finished by their prefill-derived token (max_new_tokens == 1) get a
+        no-op done StepInfo instead of overcommitting past gen_limit."""
+        ar_rids, diff_rids = [], []
+        for r in rids:
+            st = self._states[r]
+            if not isinstance(st, ARState):
+                diff_rids.append(r)
+            elif st.done:
+                infos[r] = StepInfo(0, np.zeros(1, bool), 0, True)
+            else:
+                ar_rids.append(r)
+        return ar_rids, diff_rids
+
     def decode_step(self, rids, chunk: int):
         infos: dict[int, StepInfo] = {}
-        ar_rids = [r for r in rids if isinstance(self._states[r], ARState)]
-        diff_rids = [r for r in rids if r not in set(ar_rids)]
+        if self.paged:
+            self._flush_prefills()
+            ar_rids, diff_rids = self._split_ar(rids, infos)
+            if ar_rids:
+                self._step_ar_paged(ar_rids, infos)
+            if diff_rids:
+                self._step_diffusion_paged(diff_rids, chunk, infos)
+            return 0.0, infos
+        ar_rids, diff_rids = self._split_ar(rids, infos)
         if ar_rids:
             if self.cfg.family == "ssm":
                 self._step_ar_recurrent(ar_rids, infos)

@@ -1,14 +1,20 @@
 """Paged KV-cache allocator with block tables (vLLM-style, TPU-page sized).
 
-The allocator manages logical pages; tensor storage is owned by the backend
-(the Pallas chunked-paged-attention kernel consumes exactly this block-table
-layout).  Admission control queries ``can_admit`` so continuous batching
+The allocator manages logical pages and — for real-model backends — can
+also own the device-side page pool (``k_pages``/``v_pages`` arrays in the
+exact ``[P, page_size, KVH, hd]`` layout the Pallas chunked-paged-attention
+kernel consumes, stacked across attention layers).  Sim backends skip
+``init_storage`` and use the same allocator for bookkeeping only, so
+cluster admission and routers read one KV-pressure signal regardless of
+backend.  Admission control queries ``can_admit`` so continuous batching
 never over-commits HBM.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+import numpy as np
 
 
 class OutOfPages(Exception):
@@ -23,6 +29,9 @@ class PagedKVAllocator:
     _free: list = field(init=False)
     _tables: dict = field(default_factory=dict, init=False)   # rid → [page,...]
     _lens: dict = field(default_factory=dict, init=False)     # rid → tokens
+    # device-side page pool (None until init_storage; sim backends never set)
+    k_pages: object = field(default=None, init=False)
+    v_pages: object = field(default=None, init=False)
 
     def __post_init__(self):
         self._free = list(range(self.n_pages - 1, -1, -1))
@@ -72,3 +81,42 @@ class PagedKVAllocator:
     @property
     def utilization(self) -> float:
         return 1.0 - len(self._free) / self.n_pages
+
+    # ------------------------------------------------------------------
+    # Device-side page pool (real-model backends)
+    # ------------------------------------------------------------------
+    def init_storage(self, n_kv_layers: int, n_kv_heads: int, head_dim: int,
+                     dtype=None):
+        """Allocate the device page pool: [L_attn, P, page_size, KVH, hd].
+
+        Each scanned attention layer reads its own [P, page_size, KVH, hd]
+        slice — exactly the layout ``paged_chunk_attention_kernel`` expects.
+        """
+        import jax.numpy as jnp
+        dtype = jnp.float32 if dtype is None else dtype
+        shp = (n_kv_layers, self.n_pages, self.page_size, n_kv_heads,
+               head_dim)
+        self.k_pages = jnp.zeros(shp, dtype)
+        self.v_pages = jnp.zeros(shp, dtype)
+        return self.k_pages, self.v_pages
+
+    @property
+    def has_storage(self) -> bool:
+        return self.k_pages is not None
+
+    def batch_tables(self, rids, width: int | None = None) -> np.ndarray:
+        """Padded block-table batch [B, width] int32 for a list of rids.
+
+        Rows are padded with page index 0 (a *valid* index — the kernel
+        DMAs padded slots but masks their contribution via ``ctx_lens``,
+        so entries must stay in-bounds).  ``width`` defaults to the longest
+        table in the batch.
+        """
+        tables = [self._tables[rid] for rid in rids]
+        width = width if width is not None else max(
+            (len(t) for t in tables), default=1)
+        out = np.zeros((len(rids), max(width, 1)), np.int32)
+        for i, t in enumerate(tables):
+            assert len(t) <= out.shape[1], (len(t), out.shape)
+            out[i, :len(t)] = t
+        return out

@@ -69,3 +69,47 @@ def test_free_unknown_rid_raises():
     kv = PagedKVAllocator(n_pages=4, page_size=16)
     with pytest.raises(KeyError):
         kv.free(99)
+
+
+def test_batch_tables_padded_layout():
+    kv = PagedKVAllocator(n_pages=16, page_size=16)
+    kv.allocate(0, 40)                       # 3 pages
+    kv.allocate(1, 10)                       # 1 page
+    tables = kv.batch_tables([0, 1], width=5)
+    assert tables.shape == (2, 5)
+    assert tables.dtype.name == "int32"
+    assert list(tables[0, :3]) == kv.block_table(0)
+    assert list(tables[1, :1]) == kv.block_table(1)
+    # padding stays at 0 — a valid page index the kernel may DMA but whose
+    # contribution ctx_lens masks out
+    assert (tables[0, 3:] == 0).all() and (tables[1, 1:] == 0).all()
+    # default width = longest table in the batch
+    assert kv.batch_tables([0, 1]).shape == (2, 3)
+
+
+def test_init_storage_owns_device_pages():
+    jnp = pytest.importorskip("jax.numpy")
+    kv = PagedKVAllocator(n_pages=8, page_size=4)
+    assert not kv.has_storage
+    k, v = kv.init_storage(n_kv_layers=2, n_kv_heads=2, head_dim=16,
+                           dtype=jnp.float32)
+    assert kv.has_storage
+    assert k.shape == v.shape == (2, 8, 4, 2, 16)
+    assert kv.k_pages is k and kv.v_pages is v
+
+
+def test_init_storage_matches_model_paged_cache():
+    """Allocator storage and TransformerLM.init_paged_cache must agree on
+    the pool layout (both derive the model half from paged_kv_dims)."""
+    import jax.numpy as jnp
+
+    from repro.models import ArchConfig, build_model
+    model = build_model(ArchConfig(name="t", family="dense", n_layers=2,
+                                   d_model=64, n_heads=4, n_kv_heads=2,
+                                   d_ff=128, vocab_size=64))
+    kv = PagedKVAllocator(n_pages=8, page_size=4)
+    k, v = kv.init_storage(*model.paged_kv_dims(), dtype=jnp.float32)
+    cache = model.init_paged_cache(8, 4, dtype=jnp.float32)
+    assert cache["k_pages"].shape == k.shape
+    assert cache["v_pages"].shape == v.shape
+    assert cache["k_pages"].dtype == k.dtype

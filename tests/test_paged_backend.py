@@ -1,0 +1,293 @@
+"""Unified paged KV layer: model-level paged/dense equivalence, paged
+ModelBackend engine equivalence, page-bounded admission, slot-recycle
+hygiene, and cluster-admission signal parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import KVAdmissionPolicy, build_model_cluster, fits_ever
+from repro.core import FixedScheduler
+from repro.models import ArchConfig, build_model
+from repro.serving import (DATASETS, EngineCore, ModelBackend,
+                           PoissonWorkload, ServingEngine)
+from repro.serving.kv_pool import PagedKVAllocator
+
+CFG = ArchConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                 n_kv_heads=2, d_ff=128, vocab_size=256, block_size=8,
+                 confidence_threshold=0.6)
+PROF = DATASETS["sharegpt"]
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    model = build_model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(n, seed=0, prompt=12, out=16, simultaneous=False):
+    rng = np.random.default_rng(seed)
+    reqs = list(PoissonWorkload(PROF, 50.0, n, seed=seed))
+    for r in reqs:
+        r.prompt_len = prompt
+        r.max_new_tokens = out
+        r.prompt_tokens = rng.integers(4, CFG.vocab_size, prompt).tolist()
+        if simultaneous:
+            r.arrival_time = 0.0
+    return reqs
+
+
+def _run_engine(be, reqs, chunk=8, max_batch=8):
+    """Run and capture each request's committed output tokens at release."""
+    eng = ServingEngine(be, FixedScheduler(chunk), max_batch=max_batch)
+    outs = {}
+    orig_release = be.release
+
+    def spy_release(rid):
+        outs[rid] = be.state(rid).output_tokens
+        orig_release(rid)
+
+    be.release = spy_release
+    rep = eng.run(reqs)
+    return rep, outs
+
+
+# ---------------------------------------------------------------------------
+# model-level equivalence: paged prefill/chunk/freeze vs the dense cache
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+def test_paged_model_path_matches_dense(model_and_params, impl):
+    model, params = model_and_params
+    rng = np.random.default_rng(1)
+    B, max_len, ps, c = 2, 64, 8, 8
+    prompts = [12, 9]
+    toks = np.zeros((B, 16), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, :p] = rng.integers(4, CFG.vocab_size, p)
+    lens = jnp.asarray(prompts, jnp.int32)
+
+    cache = model.init_cache(B, max_len, dtype=jnp.float32)
+    logits_d, cache = model.prefill(params, jnp.asarray(toks), lens, cache)
+
+    alloc = PagedKVAllocator(32, ps)
+    for i, p in enumerate(prompts):
+        alloc.allocate(i, p + 16)
+    tables = jnp.asarray(alloc.batch_tables([0, 1], alloc.pages_for(max_len)))
+    pcache = model.init_paged_cache(32, ps, dtype=jnp.float32)
+    last_p, pcache = model.prefill_paged(params, pcache, jnp.asarray(toks),
+                                         lens, tables)
+    for i, p in enumerate(prompts):
+        np.testing.assert_allclose(np.asarray(last_p[i]),
+                                   np.asarray(logits_d[i, p - 1]),
+                                   rtol=2e-5, atol=2e-5)
+
+    win = jnp.full((B, c), CFG.mask_token_id, jnp.int32)
+    start = jnp.asarray(prompts, jnp.int32)
+    valid = jnp.full((B,), c, jnp.int32)
+    lg_d, kv_d = model.chunk_forward(params, cache, win, start, valid)
+    lg_p, kv_p = model.chunk_forward_paged(params, pcache, win, start, valid,
+                                           tables, start, impl=impl)
+    np.testing.assert_allclose(np.asarray(lg_p), np.asarray(lg_d),
+                               rtol=3e-5, atol=3e-5)
+
+    # freeze a few window entries, then the next window must still agree
+    n_adv = jnp.asarray([3, 2], jnp.int32)
+    cache2 = model.freeze(cache, kv_d, start, n_adv)
+    pcache2 = model.freeze_paged(pcache, kv_p, tables, start, n_adv)
+    start2 = start + n_adv
+    lg_d2, _ = model.chunk_forward(params, cache2, win, start2, valid)
+    lg_p2, _ = model.chunk_forward_paged(params, pcache2, win, start2, valid,
+                                         tables, start2, impl=impl)
+    np.testing.assert_allclose(np.asarray(lg_p2), np.asarray(lg_d2),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_rejects_recurrent_families():
+    cfg = ArchConfig(name="r", family="ssm", n_layers=2, d_model=64,
+                     rwkv_head_dim=16, d_ff=128, vocab_size=256,
+                     diffusion=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ModelBackend(model, params, paged=True)
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence (ISSUE acceptance: ≥8-request elastic workload)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["kernel", "ref"])
+def test_engine_paged_matches_dense_elastic(model_and_params, impl):
+    model, params = model_and_params
+
+    def run(paged):
+        be = ModelBackend(model, params, n_slots=8, max_len=64,
+                          decode_mode="elastic", paged=paged, attn_impl=impl)
+        return _run_engine(be, _requests(9))
+
+    rep_d, out_d = run(False)
+    rep_p, out_p = run(True)
+    assert len(rep_d.metrics) == len(rep_p.metrics) == 9
+    assert out_d == out_p                     # identical committed tokens
+    assert rep_d.token_utilization == rep_p.token_utilization
+    assert rep_d.total_tokens == rep_p.total_tokens
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_ar_single_token_request_completes(model_and_params, paged):
+    """max_new_tokens=1 AR: the prefill-derived token finishes the request
+    before any decode step — the backend must not commit past gen_limit
+    (regression: IndexError on ARState.committed)."""
+    model, params = model_and_params
+    be = ModelBackend(model, params, n_slots=2, max_len=64,
+                      decode_mode="ar", paged=paged)
+    rep, outs = _run_engine(be, _requests(3, out=1, simultaneous=True),
+                            chunk=1, max_batch=2)
+    assert len(rep.metrics) == 3
+    assert all(m.n_tokens == 1 for m in rep.metrics)
+    assert all(len(v) == 1 for v in outs.values())
+
+
+def test_engine_paged_matches_dense_ar(model_and_params):
+    model, params = model_and_params
+
+    def run(paged):
+        be = ModelBackend(model, params, n_slots=4, max_len=64,
+                          decode_mode="ar", paged=paged)
+        return _run_engine(be, _requests(5, out=8), chunk=1, max_batch=4)
+
+    _, out_d = run(False)
+    _, out_p = run(True)
+    assert out_d == out_p
+
+
+# ---------------------------------------------------------------------------
+# page-bounded admission (ISSUE acceptance: oversubscribe the slot limit)
+# ---------------------------------------------------------------------------
+
+def test_admission_is_page_bounded_not_slot_bounded(model_and_params):
+    model, params = model_and_params
+    # 16 simultaneous requests: the old dense default (n_slots=8) would cap
+    # the batch at 8; the paged pool holds all 16 at once.
+    be = ModelBackend(model, params, n_slots=8, max_len=64, paged=True,
+                      kv_pages=16 * 2)                 # 16 × 28tok ÷ 16/page
+    rep, _ = _run_engine(be, _requests(16, simultaneous=True), max_batch=32)
+    assert len(rep.metrics) == 16
+    assert all(m.n_tokens == 16 for m in rep.metrics)
+    assert max(rep.batch_history) > 8
+    assert be.kv.free_pages == be.kv.n_pages           # pool fully drained
+
+
+def test_paged_can_admit_tracks_pages(model_and_params):
+    model, params = model_and_params
+    be = ModelBackend(model, params, max_len=64, paged=True, kv_pages=4,
+                      page_size=16)
+    reqs = _requests(3, prompt=16, out=16)             # 2 pages each
+    assert be.can_admit(reqs[0])
+    be.admit(reqs[0])
+    assert be.can_admit(reqs[1])
+    be.admit(reqs[1])
+    assert not be.can_admit(reqs[2])                   # 0 pages left
+    be.release(reqs[0].rid)
+    assert be.can_admit(reqs[2])
+
+
+# ---------------------------------------------------------------------------
+# slot/page recycle hygiene (satellite: release → re-admit regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_release_readmit_recycles_cleanly(model_and_params, paged):
+    """A recycled slot/page set must reproduce exactly what a fresh backend
+    produces — no stale ctx len, recurrent state, or page contents."""
+    model, params = model_and_params
+    a = _requests(1, seed=3, prompt=24, out=16)[0]
+    b = _requests(1, seed=4, prompt=8, out=16)[0]
+    b.rid = 1
+
+    be = ModelBackend(model, params, n_slots=1, max_len=64, paged=paged)
+    _, outs = _run_engine(be, [a], max_batch=1)        # slot 0 used + freed
+    _, outs_b = _run_engine(be, [b], max_batch=1)      # slot 0 recycled
+
+    fresh = ModelBackend(model, params, n_slots=1, max_len=64, paged=paged)
+    _, outs_fresh = _run_engine(fresh, [b], max_batch=1)
+    assert outs_b[b.rid] == outs_fresh[b.rid]
+
+
+def test_dense_release_resets_slot_len(model_and_params):
+    model, params = model_and_params
+    be = ModelBackend(model, params, n_slots=2, max_len=64, paged=False)
+    req = _requests(1, prompt=24)[0]
+    be.admit(req)
+    slot = be._slot_of[req.rid]
+    assert int(be.cache["len"][slot]) == 24
+    be.release(req.rid)
+    assert int(be.cache["len"][slot]) == 0
+
+
+def test_release_resets_recurrent_states():
+    cfg = ArchConfig(name="r", family="ssm", n_layers=2, d_model=64,
+                     rwkv_head_dim=16, d_ff=128, vocab_size=256,
+                     diffusion=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    be = ModelBackend(model, params, n_slots=1, max_len=64, decode_mode="ar")
+    req = _requests(1, prompt=8)[0]
+    be.admit(req)
+    slot = be._slot_of[req.rid]
+    dirty = any(bool(jnp.any(leaf[:, slot] != 0))
+                for leaf in jax.tree.leaves(be.cache["states"]))
+    assert dirty                                       # prefill wrote state
+    be.release(req.rid)
+    for leaf in jax.tree.leaves(be.cache["states"]):
+        assert not bool(jnp.any(leaf[:, slot] != 0))
+
+
+# ---------------------------------------------------------------------------
+# cluster admission reads one allocator signal for sim and paged model paths
+# ---------------------------------------------------------------------------
+
+def test_cluster_admission_reads_paged_allocator(model_and_params):
+    model, params = model_and_params
+    be = ModelBackend(model, params, max_len=64, paged=True, kv_pages=4,
+                      page_size=16)
+    core = EngineCore(be, FixedScheduler(8), max_batch=8)
+    policy = KVAdmissionPolicy(low_watermark=0.0)
+    small, big = _requests(2, prompt=16, out=16)       # 2 pages each
+    big.prompt_len, big.max_new_tokens = 48, 32        # 5 pages > pool
+    assert fits_ever(core, small)
+    assert not fits_ever(core, big)                    # exceeds whole pool
+    assert policy.admissible(core, small)
+    be.admit(small)
+    assert policy.reserved_pages(core) == 0            # active, not pending
+    core.submit(small)                                 # now pending too
+    assert policy.reserved_pages(core) == 2
+    # 2 allocated + 2 reserved leaves 0 of 4 pages → another 2-pager spills
+    small2 = _requests(1, seed=9, prompt=16, out=16)[0]
+    small2.rid = 7
+    assert not policy.admissible(core, small2)
+
+
+def test_build_model_cluster_serves_paged_replicas(model_and_params):
+    """Two paged real-model replicas under the cluster event loop, placed
+    through the same KVAdmissionPolicy the sim cluster uses."""
+    model, params = model_and_params
+    cluster = build_model_cluster(model, params, 2, "round_robin",
+                                  profile=PROF, mode="bd8", max_len=64,
+                                  max_batch=4)
+    rep = cluster.run(_requests(6, simultaneous=True))
+    assert len(rep.metrics) == 6
+    assert all(m.n_tokens == 16 for m in rep.metrics)
+    assert not rep.rejected
+    for core in cluster.replicas:
+        assert core.backend.kv.free_pages == core.backend.kv.n_pages
+
+
+def test_fits_ever_respects_model_max_len(model_and_params):
+    model, params = model_and_params
+    be = ModelBackend(model, params, max_len=32, paged=True, kv_pages=64)
+    core = EngineCore(be, FixedScheduler(8))
+    req = _requests(1, prompt=24, out=16)[0]           # 40 tokens > max_len
+    assert not fits_ever(core, req)                    # pages OK, ctx not

@@ -119,6 +119,57 @@ def test_kv_pool_invariants(ops):
     assert pool.free_pages == 64
 
 
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+                          st.integers(1, 300)),
+                min_size=1, max_size=80))
+@settings(max_examples=100, deadline=None)
+def test_kv_pool_alloc_extend_free_invariants(ops):
+    """Arbitrary allocate/extend/free interleavings: the free-page
+    invariant holds, ``extend`` never double-books a page, and OutOfPages
+    is raised exactly when pages_for(n) exceeds free_pages."""
+    pool = PagedKVAllocator(n_pages=48, page_size=16)
+    live: dict[int, int] = {}                  # rid → current token len
+    rid = 0
+    for op, n_tokens in ops:
+        if op == "free" and live:
+            victim = next(iter(live))
+            pool.free(victim)
+            del live[victim]
+        elif op == "extend" and live:
+            target = next(iter(live))
+            new_len = max(live[target], n_tokens)
+            extra = pool.pages_for(new_len) - len(pool.block_table(target))
+            before = pool.block_table(target)
+            if extra > pool.free_pages:
+                with pytest.raises(OutOfPages):
+                    pool.extend(target, new_len)
+                assert pool.block_table(target) == before  # rollback
+                assert pool.length(target) == live[target]
+            else:
+                table = pool.extend(target, new_len)
+                assert table[:len(before)] == before       # prefix preserved
+                live[target] = new_len
+        else:
+            need = pool.pages_for(n_tokens)
+            if need > pool.free_pages:
+                with pytest.raises(OutOfPages):
+                    pool.allocate(rid, n_tokens)
+                assert rid not in pool._tables             # no partial state
+            else:
+                assert len(pool.allocate(rid, n_tokens)) == need
+                live[rid] = n_tokens
+            rid += 1
+        # global invariants after every operation
+        owned = [p for r in live for p in pool.block_table(r)]
+        assert len(owned) == len(set(owned))               # no double-booking
+        assert len(owned) + pool.free_pages == 48
+        for r, tokens in live.items():
+            assert len(pool.block_table(r)) == pool.pages_for(tokens)
+    for r in list(live):
+        pool.free(r)
+    assert pool.free_pages == 48
+
+
 @given(st.integers(1, 200), st.integers(1, 400))
 @settings(max_examples=100, deadline=None)
 def test_kv_pool_extend(first, second):
