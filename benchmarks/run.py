@@ -493,6 +493,22 @@ def paged_attn(quick=False):
          "full grid in BENCH_paged_attn.json")
 
 
+def kv_pressure(quick=False):
+    """Incremental growth + preemption vs worst-case reservation sweep →
+    BENCH_kv_pressure.json (see benchmarks/kv_pressure_sweep)."""
+    from benchmarks.kv_pressure_sweep import run_sweep
+    payload = run_sweep(quick=quick, verbose=False)
+    s = payload["summary"]
+    emit("kv_pressure.peak_batch_gain", f"{s['batch_gain']:.2f}x",
+         f"incremental vs reserve at {s['tight_pool_pages']} pages / "
+         f"{s['tight_rate']} req/s")
+    emit("kv_pressure.goodput_gain", f"{s['goodput_gain']:.2f}x",
+         "full grid in BENCH_kv_pressure.json")
+    emit("kv_pressure.cap_gain_elastic", f"{s['cap_gain_elastic']:.2f}x",
+         f"memory-aware cap vs uncapped elastic at "
+         f"{s['cap_gain_elastic_pages']} pages")
+
+
 ALL = {
     "table2": table2_profiles,
     "fig1": fig1_load_sensitivity,
@@ -508,6 +524,7 @@ ALL = {
     "kernels": bench_kernels,
     "cluster": cluster,
     "paged_attn": paged_attn,
+    "kv_pressure": kv_pressure,
 }
 
 

@@ -5,10 +5,13 @@ requests).
 
     PYTHONPATH=src python examples/serve_elastic.py [--requests 12]
 
-``--paged`` swaps the dense fixed-slot KV cache for the unified paged pool
-(block tables + the Pallas chunked-paged-attention kernel, interpret mode
-on CPU) and demonstrates page-bounded admission: at equal KV memory, more
-requests run in flight than the old ``n_slots`` ceiling ever allowed.
+Attention-only families serve through the unified paged KV pool (block
+tables + the Pallas chunked-paged-attention kernel, interpret mode on CPU)
+with **memory-elastic admission**: a request claims only its prompt's pages
+at admit and grows page-by-page as chunks commit, so far more requests run
+in flight than worst-case reservation would allow — and when the pool runs
+dry mid-decode, the engine preempts a victim (freeing its pages) and
+re-prefills it later.  ``--tight-pool`` demonstrates that preemption path.
 """
 
 import argparse
@@ -26,9 +29,9 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--requests", type=int, default=10)
 ap.add_argument("--prompt", type=int, default=16)
 ap.add_argument("--out", type=int, default=24)
-ap.add_argument("--paged", action="store_true",
-                help="serve through the paged KV pool (page-bounded "
-                     "admission + Pallas paged-attention path)")
+ap.add_argument("--tight-pool", action="store_true",
+                help="also run with a page pool too small for everyone, "
+                     "showing preemption-on-OutOfPages")
 args = ap.parse_args()
 
 N_SLOTS, MAX_LEN = 8, 128
@@ -57,8 +60,7 @@ def workload(simultaneous=False):
 
 def run(mode, chunk=None):
     be = ModelBackend(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-                      decode_mode="ar" if mode == "ar" else "elastic",
-                      paged=args.paged)
+                      decode_mode="ar" if mode == "ar" else "elastic")
     if mode == "elastic":
         an = AnalyticDeviceModel(cfg, CPU_HOST)
         samples = [(b, c, an.step_latency(b, c, 64))
@@ -77,27 +79,39 @@ def run(mode, chunk=None):
     return rep
 
 
-kv_mode = "paged KV pool" if args.paged else "dense slot cache"
 print(f"serving {args.requests} batched requests "
       f"(prompt {args.prompt}, output {args.out}) on a real model "
-      f"[{kv_mode}]\n")
+      f"[paged KV pool, incremental page growth]\n")
 run("ar")
 run("fixed", 8)
 rep = run("elastic")
 print("\nelastic runtime distributions:", chunk_distribution(rep))
 
-if args.paged:
-    # Page-bounded admission demo: the same KV memory the dense backend
-    # spends on 8 fixed max_len slots, handed to the allocator as pages.
-    # Requests only need prompt+out tokens each, so far more than 8 fit.
-    total = args.prompt + args.out
-    be = ModelBackend(model, params, n_slots=N_SLOTS, max_len=MAX_LEN,
-                      paged=True)            # pool = n_slots×max_len tokens
-    fit = be.kv.n_pages // be.kv.pages_for(total)
+# Memory-elastic admission demo: requests claim prompt pages only, so the
+# pool admits far more in flight than worst-case (prompt+out) reservation.
+total = args.prompt + args.out
+be = ModelBackend(model, params, n_slots=N_SLOTS, max_len=MAX_LEN)
+fit_worst = be.kv.n_pages // be.kv.pages_for(total)
+fit_prompt = be.kv.n_pages // be.kv.pages_for(args.prompt)
+eng = ServingEngine(be, FixedScheduler(8), max_batch=64)
+rep = eng.run(workload(simultaneous=True))
+print(f"\nmemory-elastic admission: pool of {be.kv.n_pages} pages fits "
+      f"{fit_prompt} prompts at admit (worst-case reservation: {fit_worst}; "
+      f"dense-slot ceiling was {N_SLOTS}); peak in-flight batch = "
+      f"{max(rep.batch_history)}, preemptions = {rep.preemptions}")
+assert be.kv.free_pages == be.kv.n_pages      # drained: no page leaks
+
+if args.tight_pool:
+    # Pool sized so the whole workload cannot co-resident at full length:
+    # mid-decode OutOfPages forces evict+requeue+re-prefill, yet everyone
+    # still completes with full outputs.
+    pages = max(2 * be.kv.pages_for(total), 3 * be.kv.pages_for(args.prompt))
+    be = ModelBackend(model, params, max_len=MAX_LEN, kv_pages=pages)
     eng = ServingEngine(be, FixedScheduler(8), max_batch=64)
     rep = eng.run(workload(simultaneous=True))
-    print(f"\npage-bounded admission: pool of {be.kv.n_pages} pages fits "
-          f"{fit} requests of {total} tokens (dense ceiling: {N_SLOTS} "
-          f"slots); peak in-flight batch = {max(rep.batch_history)}")
+    done = sum(1 for m in rep.metrics if m.n_tokens == args.out)
+    print(f"tight pool ({pages} pages): {done}/{args.requests} requests "
+          f"completed full outputs with {rep.preemptions} preemptions; "
+          f"pool drained clean = {be.kv.free_pages == be.kv.n_pages}")
 
 print("done — all requests completed through the continuous-batching engine")

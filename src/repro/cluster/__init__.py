@@ -3,7 +3,8 @@ with spill-back, optional low-priority preemption, and a shared-virtual-clock
 event loop over steppable :class:`~repro.serving.engine.EngineCore` replicas.
 """
 
-from repro.cluster.admission import KVAdmissionPolicy, fits_ever, kv_tokens
+from repro.cluster.admission import (KVAdmissionPolicy, admission_pages,
+                                     fits_ever, kv_tokens)
 from repro.cluster.engine import ClusterEngine
 from repro.cluster.factory import (build_model_cluster, build_sim_cluster,
                                    make_replica_scheduler)
@@ -12,7 +13,8 @@ from repro.cluster.router import (ROUTERS, JoinShortestQueueRouter,
                                   make_router)
 
 __all__ = [
-    "ClusterEngine", "KVAdmissionPolicy", "fits_ever", "kv_tokens",
+    "ClusterEngine", "KVAdmissionPolicy", "admission_pages", "fits_ever",
+    "kv_tokens",
     "RoundRobinRouter", "JoinShortestQueueRouter", "SaturationAwareRouter",
     "ROUTERS", "make_router", "build_sim_cluster", "build_model_cluster",
     "make_replica_scheduler",

@@ -3,10 +3,14 @@
 Fan et al. (*Taming the Memory Footprint Crisis*) show that at fleet scale
 the binding constraint is KV-cache admission: placing a request on a replica
 whose pool cannot (soon) hold it head-of-line-blocks that replica's whole
-queue.  The policy here reserves pages for everything already queued on the
-replica and only places a request if the pool keeps a free-page watermark
-after the reservation; otherwise the request *spills back* to the cluster
-queue and is retried as replicas drain.
+queue.  Since the KV layer went memory-elastic, backends admit on **prompt
+pages only** and grow incrementally, so the policy reserves each queued
+request's *admission* pages (prompt-only for incremental backends, the full
+footprint for legacy ``reserve``-mode sims) and only places a request if the
+pool keeps a free-page watermark after the reservation — the watermark is
+now the headroom that absorbs in-flight page growth before the engine has
+to preempt.  Otherwise the request *spills back* to the cluster queue and
+is retried as replicas drain.
 """
 
 from __future__ import annotations
@@ -17,15 +21,27 @@ from repro.serving.request import Request
 
 
 def kv_tokens(req: Request) -> int:
+    """Full KV footprint — every token the request holds at completion."""
     return req.prompt_len + req.max_new_tokens
 
 
+def admission_pages(core, req: Request) -> int:
+    """Pages the replica's backend claims when it admits ``req`` (the
+    backend knows whether it reserves the prompt or the worst case)."""
+    fn = getattr(core.backend, "admit_pages", None)
+    if fn is not None:
+        return fn(req)
+    kv = getattr(core.backend, "kv", None)
+    return kv.pages_for(req.prompt_len) if kv is not None else 0
+
+
 def fits_ever(core, req: Request) -> bool:
-    """Whether the request could be admitted on an *empty* replica — a
-    request bigger than the whole KV pool (or model context length) would
-    otherwise queue forever and live-lock the event loop.  Paged model
-    backends carry *both* bounds (allocator pages and per-request
-    ``max_len``), so the checks compose."""
+    """Whether the request could ever *complete* on an empty replica — it
+    must hold its full ``prompt + max_new`` footprint at finish even under
+    incremental growth, so a request bigger than the whole KV pool (or
+    model context length) would queue/preempt forever and live-lock the
+    event loop.  Paged model backends carry *both* bounds (allocator pages
+    and per-request ``max_len``), so the checks compose."""
     kv = getattr(core.backend, "kv", None)
     if kv is not None and kv.pages_for(kv_tokens(req)) > kv.n_pages:
         return False
@@ -37,9 +53,10 @@ def fits_ever(core, req: Request) -> bool:
 
 @dataclass
 class KVAdmissionPolicy:
-    """Admit onto a replica only if, after reserving pages for every request
-    already queued there, the new request still fits with ``low_watermark``
-    of the pool left free (headroom for in-flight growth)."""
+    """Admit onto a replica only if, after reserving admission pages for
+    every request already queued there, the new request still fits with
+    ``low_watermark`` of the pool left free (headroom for in-flight page
+    growth before memory preemption kicks in)."""
 
     low_watermark: float = 0.05
 
@@ -47,17 +64,17 @@ class KVAdmissionPolicy:
         kv = getattr(core.backend, "kv", None)
         if kv is None:
             return 0
-        return sum(kv.pages_for(kv_tokens(r)) for r in core.pending_requests())
+        return sum(admission_pages(core, r) for r in core.pending_requests())
 
     def admissible(self, core, req: Request) -> bool:
         kv = getattr(core.backend, "kv", None)
         if kv is None:
-            # Dense-slot ModelBackend (no allocator): queue if the request
+            # Slot-cache ModelBackend (no allocator): queue if the request
             # can ever fit; the engine-level can_admit gate does the rest.
             # Sim and paged model backends both expose ``.kv`` and take the
             # page-reservation branch below — one KV-pressure signal.
             return core.backend.can_admit(req) or core.n_active > 0
-        need = kv.pages_for(kv_tokens(req))
+        need = admission_pages(core, req)
         headroom = kv.free_pages - self.reserved_pages(core) - need
         return headroom >= self.low_watermark * kv.n_pages
 
@@ -69,7 +86,7 @@ class KVAdmissionPolicy:
         kv = getattr(core.backend, "kv", None)
         if kv is None:
             return []
-        need = kv.pages_for(kv_tokens(req))
+        need = admission_pages(core, req)
         deficit = need + self.reserved_pages(core) - kv.free_pages \
             + int(self.low_watermark * kv.n_pages)
         if deficit <= 0:
@@ -87,7 +104,7 @@ class KVAdmissionPolicy:
         victims, freed = [], 0
         for r in candidates:
             victims.append(r.rid)
-            freed += len(kv.block_table(r.rid))
+            freed += kv.table_len(r.rid)
             if freed >= deficit:
                 return victims
         return []                # even evicting everything would not fit

@@ -7,8 +7,11 @@ real deployments, so their timelines advance independently), and the
 cluster loop always services the earliest next event — either a workload
 arrival (routed + admission-checked, possibly spilling back to the cluster
 queue or preempting a low-priority request) or the lagging replica's next
-engine iteration.  Determinism: ties break on replica index, and all
-randomness lives inside the per-replica backends.
+engine iteration.  Replica cores may additionally preempt *internally* on
+OutOfPages pressure (memory-elastic incremental page growth); both tiers
+share :meth:`EngineCore.preempt` and are summed in
+``ClusterReport.preemptions``.  Determinism: ties break on replica index,
+and all randomness lives inside the per-replica backends.
 """
 
 from __future__ import annotations

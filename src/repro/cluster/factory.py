@@ -30,11 +30,13 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                       device=TPU_V5E, mode: str = "elastic",
                       kv_pages: int = 1 << 16, max_batch: int = 256,
                       seed: int = 0, kv_watermark: float = 0.05,
-                      preemption: bool = False) -> ClusterEngine:
+                      preemption: bool = False,
+                      kv_admission: str = "incremental") -> ClusterEngine:
     """N independent SimBackend+scheduler replicas (per-replica RNG seeds,
     per-replica TU estimator state) under one ClusterEngine.  ``router``
     may be a name (see :data:`repro.cluster.router.ROUTERS`) or a router
-    instance."""
+    instance; ``kv_admission`` picks incremental page growth (default) or
+    the legacy worst-case ``reserve`` baseline."""
     if isinstance(router, str):
         router = make_router(router)
     replicas = []
@@ -42,7 +44,8 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
         be = SimBackend(cfg, device,
                         tokens_per_step=profile.tokens_per_step_bd32,
                         decode_mode="ar" if mode == "ar" else "elastic",
-                        kv_pool_pages=kv_pages, seed=seed + 1000 * i)
+                        kv_pool_pages=kv_pages, seed=seed + 1000 * i,
+                        kv_admission=kv_admission)
         sch = make_replica_scheduler(be, profile, mode)
         replicas.append(EngineCore(be, sch, max_batch=max_batch))
     return ClusterEngine(replicas, router,
@@ -52,24 +55,24 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
 
 
 def build_model_cluster(model, params, n_replicas: int, router, *, profile,
-                        mode: str = "elastic", paged: bool = True,
+                        mode: str = "elastic",
                         n_slots: int = 8, max_len: int = 128,
                         kv_pages: int | None = None,
                         page_size: int | None = None, max_batch: int = 64,
                         kv_watermark: float = 0.05,
                         preemption: bool = False) -> ClusterEngine:
     """N real-model replicas (shared params, per-replica KV pool) under one
-    ClusterEngine.  With ``paged=True`` every replica admits by allocator
-    pages, so :class:`KVAdmissionPolicy` reads the identical free-page /
-    reservation signal it reads from SimBackend replicas."""
+    ClusterEngine.  Attention-only families serve paged, so every replica
+    admits by allocator pages (prompt-only, incremental growth) and
+    :class:`KVAdmissionPolicy` reads the identical free-page / reservation
+    signal it reads from SimBackend replicas."""
     if isinstance(router, str):
         router = make_router(router)
     replicas = []
     for _ in range(n_replicas):
         be = ModelBackend(model, params, n_slots=n_slots, max_len=max_len,
                           decode_mode="ar" if mode == "ar" else "elastic",
-                          paged=paged, kv_pages=kv_pages,
-                          page_size=page_size)
+                          kv_pages=kv_pages, page_size=page_size)
         sch = scheduler_for_mode(
             mode, AnalyticDeviceModel(model.cfg, CPU_HOST),
             prior_tokens_per_step=profile.tokens_per_step_bd32,

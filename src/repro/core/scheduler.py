@@ -1,4 +1,4 @@
-"""Saturation-aware elastic scheduling (paper §5).
+"""Saturation-aware, memory-elastic scheduling (paper §5).
 
 At every decode iteration the scheduler solves
 
@@ -8,6 +8,14 @@ combining the offline-profiled piecewise-affine latency model (§5.2) with the
 online token-utilization estimator (§5.3).  A small hysteresis keeps the
 closed loop stable (the paper's "transition between granularities without
 introducing instability").
+
+The engine additionally feeds the allocator's KV utilization into
+``select`` — a chunk of size ``c`` speculates ``c`` window tokens whose
+commits claim fresh pages, so as free pages tighten the candidate set is
+capped to smaller chunks (monotonically down to the smallest candidate),
+trading a little token-throughput for fewer OutOfPages preemptions.  This
+makes memory the same kind of runtime control signal as compute
+saturation.
 """
 
 from __future__ import annotations
@@ -26,6 +34,17 @@ class ElasticScheduler:
     tu_estimator: TokenUtilEstimator
     candidates: tuple = DEFAULT_CHUNKS
     hysteresis: float = 0.05
+    # KV-pressure knee: below memory_lo utilization the full candidate set
+    # competes; between memory_lo and memory_hi the cap walks down the
+    # sorted candidates; at/above memory_hi only the smallest chunk remains.
+    # The knee is deliberately an EMERGENCY BRAKE (defaults measured in
+    # benchmarks/kv_pressure_sweep): capping earlier throttles steady-state
+    # throughput under tight pools for no memory-safety benefit, while
+    # capping only near exhaustion trims the per-step reservation spike
+    # exactly when free pages are about to run out — beating both an
+    # aggressive cap and no cap on goodput at moderate pool pressure.
+    memory_lo: float = 0.9
+    memory_hi: float = 1.0
     _current: int = field(default=0, init=False)
     history: list = field(default_factory=list, init=False)
 
@@ -39,11 +58,24 @@ class ElasticScheduler:
         t = self.latency_model.predict(b, c)
         return n * b / t
 
-    def select(self, b: int) -> int:
-        """Pick the chunk size for the next iteration given live batch b."""
+    def memory_cap(self, kv_util: float | None) -> int:
+        """Largest admissible chunk at allocator utilization ``kv_util`` —
+        monotonically non-increasing in utilization."""
+        cands = sorted(self.candidates)
+        if kv_util is None or kv_util <= self.memory_lo:
+            return cands[-1]
+        span = max(self.memory_hi - self.memory_lo, 1e-9)
+        frac = min((kv_util - self.memory_lo) / span, 1.0)
+        steps_down = int(round(frac * (len(cands) - 1)))
+        return cands[len(cands) - 1 - steps_down]
+
+    def select(self, b: int, kv_util: float | None = None) -> int:
+        """Pick the chunk size for the next iteration given live batch b
+        and (optionally) the KV allocator's utilization in [0, 1]."""
         if b <= 0:
             return max(self.candidates)
-        scores = {c: self.score(c, b) for c in self.candidates}
+        cap = self.memory_cap(kv_util)
+        scores = {c: self.score(c, b) for c in self.candidates if c <= cap}
         best = max(scores, key=scores.get)
         cur = self._current
         if cur in scores and scores[best] <= (1 + self.hysteresis) * scores[cur]:
@@ -88,7 +120,7 @@ class FixedScheduler:
     chunk: int
     history: list = field(default_factory=list, init=False)
 
-    def select(self, b: int) -> int:
+    def select(self, b: int, kv_util: float | None = None) -> int:
         self.history.append((b, self.chunk))
         return self.chunk
 

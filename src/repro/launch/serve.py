@@ -41,9 +41,14 @@ def main():
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--obs", action="store_true",
                     help="out-block streaming for large chunks")
-    ap.add_argument("--paged", action="store_true",
-                    help="model backend: paged KV pool + Pallas paged-"
-                         "attention path (page-bounded admission)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="KV pool pages (sim default 65536; model default "
+                         "mirrors 8 slots × max_len)")
+    ap.add_argument("--kv-admission", default="incremental",
+                    choices=["incremental", "reserve"],
+                    help="sim backend: incremental page growth with "
+                         "preemption-on-OutOfPages (default) vs legacy "
+                         "worst-case reservation at admit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,7 +58,9 @@ def main():
         backend = SimBackend(cfg, DEVICES[args.device],
                              tokens_per_step=profile.tokens_per_step_bd32,
                              decode_mode="ar" if args.mode == "ar"
-                             else "elastic", obs=args.obs, seed=args.seed)
+                             else "elastic", obs=args.obs, seed=args.seed,
+                             kv_pool_pages=args.kv_pages or 1 << 16,
+                             kv_admission=args.kv_admission)
         wl = PoissonWorkload(profile, args.rate, args.requests,
                              seed=args.seed)
         sched = make_scheduler(args.mode, backend, profile)
@@ -61,10 +68,12 @@ def main():
         cfg = get_smoke_config(args.arch)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
+        # attention families serve through the paged KV pool automatically
+        # (prompt-pages-only admission + incremental growth)
         backend = ModelBackend(model, params, n_slots=8, max_len=256,
                                decode_mode="ar" if args.mode == "ar"
                                else "elastic", obs=args.obs,
-                               paged=args.paged)
+                               kv_pages=args.kv_pages)
         import numpy as np
         rng = np.random.default_rng(args.seed)
         wl = PoissonWorkload(profile, args.rate, args.requests,
@@ -92,6 +101,7 @@ def main():
           f"{report.tpot_percentile(90)*1e3:.1f} / "
           f"{report.tpot_percentile(99)*1e3:.1f} ms")
     print(f"token utilization: {report.token_utilization:.3f}")
+    print(f"memory preemptions: {report.preemptions}")
     print(f"runtime distributions: {chunk_distribution(report)}")
 
 

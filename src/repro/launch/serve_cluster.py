@@ -25,7 +25,8 @@ def run_cluster(args, profile):
         get_config(args.arch), profile, args.replicas, args.router,
         device=DEVICES[args.device], mode=args.mode,
         kv_pages=args.kv_pages, max_batch=args.max_batch, seed=args.seed,
-        kv_watermark=args.kv_watermark, preemption=args.preemption)
+        kv_watermark=args.kv_watermark, preemption=args.preemption,
+        kv_admission=args.kv_admission)
     wl = list(make_trace(profile, args.trace, args.rate, args.requests,
                          seed=args.seed))
     frac = args.high_priority_frac
@@ -58,6 +59,10 @@ def main():
                     help="KV pool pages per replica")
     ap.add_argument("--kv-watermark", type=float, default=0.05,
                     help="free-page fraction kept after admission")
+    ap.add_argument("--kv-admission", default="incremental",
+                    choices=["incremental", "reserve"],
+                    help="incremental page growth + memory preemption "
+                         "(default) vs legacy worst-case reservation")
     ap.add_argument("--preemption", action="store_true",
                     help="evict low-priority requests under KV pressure")
     ap.add_argument("--high-priority-frac", type=float, default=None,

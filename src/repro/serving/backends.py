@@ -5,11 +5,11 @@
   device model.  This reproduces the paper's serving-scale experiments
   deterministically on CPU.
 * :class:`ModelBackend` — real-model backend: a (tiny) JAX model runs
-  end-to-end; commits come from actual softmax confidences.  With
-  ``paged=True`` it serves through the unified paged KV pool and the
-  Pallas chunked-paged-attention kernel (compiled on TPU, interpret/ref
-  path on CPU); ``paged=False`` keeps the legacy dense-slot cache for one
-  release.
+  end-to-end; commits come from actual softmax confidences.  Attention-only
+  families always serve through the unified paged KV pool and the Pallas
+  chunked-paged-attention kernel (compiled on TPU, interpret/ref path on
+  CPU); recurrent families (ssm/hybrid) keep a fixed-slot recurrent-state
+  cache because their states cannot be paged.
 
 Both expose the same protocol:
     can_admit(request)        -> bool
@@ -17,6 +17,14 @@ Both expose the same protocol:
     decode_step(rids, chunk)  -> (latency_s, {rid: StepInfo})
     release(rid)
     state(rid)                -> decode state (ChunkedDecodeState or ARState)
+
+Memory elasticity (Fan et al.'s admission, ROADMAP): page-backed backends
+admit on **prompt pages only** and grow incrementally — every decode step
+reserves its worst-case page growth up front (``step_page_deficit`` lets
+the engine preempt a victim *before* the step when the pool is short), and
+:class:`~repro.serving.kv_pool.OutOfPages` raised from ``decode_step`` is
+transactional: no decode state was mutated, so the engine can preempt and
+retry the step.
 """
 
 from __future__ import annotations
@@ -29,7 +37,7 @@ from repro.core.chunked import ChunkedDecodeState
 from repro.core.diffusion import softmax_confidence
 from repro.core.latency_model import AnalyticDeviceModel, DeviceSpec, TPU_V5E
 from repro.models.common import ArchConfig
-from repro.serving.kv_pool import PagedKVAllocator
+from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
 from repro.serving.request import Request
 from repro.serving.workload import CommitSimulator
 
@@ -95,26 +103,93 @@ def _decode_mode_for(cfg: ArchConfig, decode_mode: str) -> str:
 
 
 # ===========================================================================
+# Incremental page-growth step protocol (shared by sim and model backends)
+# ===========================================================================
+
+def _worst_step_len(st, chunk: int) -> int:
+    """Upper bound on a request's frozen-KV token length after one decode
+    step at ``chunk`` — the page reservation the step protocol claims up
+    front.  AR freezes at most one token per step; slide windows at most
+    ``chunk``; block-pinned windows commit whole blocks atomically."""
+    if st.done:
+        return st.prompt_len + st.frozen
+    if isinstance(st, ARState):
+        return st.prompt_len + st.frozen + 1
+    grow = st.block_size if st.mode == "block_pinned" else chunk
+    return st.prompt_len + min(st.frozen + grow, st.gen_limit)
+
+
+def _step_page_deficit(kv: PagedKVAllocator, states, rids, chunk: int) -> int:
+    """Pages the pool is short of for the batch's worst-case step growth.
+    ``<= 0`` means the next step is guaranteed to fit; positive is the
+    number of pages the engine must free (by preempting) before stepping."""
+    need = 0
+    for rid in rids:
+        st = states[rid]
+        need += max(0, kv.pages_for(_worst_step_len(st, chunk))
+                    - kv.table_len(rid))
+    return need - kv.free_pages
+
+
+def _reserve_step(kv: PagedKVAllocator, states, rids, chunk: int):
+    """Extend every request's table to its worst-case post-step length.
+
+    Transactional: on :class:`OutOfPages` every partial extension is rolled
+    back before re-raising, so the caller observes either a fully reserved
+    step or an untouched allocator (and unmutated decode states — callers
+    reserve *before* running the step)."""
+    prev = []
+    try:
+        for rid in rids:
+            prev.append((rid, kv.length(rid)))
+            kv.extend(rid, max(kv.length(rid),
+                               _worst_step_len(states[rid], chunk)))
+    except OutOfPages:
+        for rid, ln in prev:
+            kv.trim(rid, ln)
+        raise
+
+
+def _trim_step(kv: PagedKVAllocator, states, rids):
+    """Return over-reserved tail pages after a step: each request keeps
+    exactly the pages covering its realized ``prompt + frozen`` KV."""
+    for rid in rids:
+        st = states[rid]
+        kv.trim(rid, st.prompt_len + st.frozen)
+
+
+# ===========================================================================
 # Virtual-clock simulation backend
 # ===========================================================================
 
 class SimBackend:
-    """Virtual-clock serving backend over the analytic device model."""
+    """Virtual-clock serving backend over the analytic device model.
+
+    ``kv_admission="incremental"`` (default) admits on prompt pages only and
+    grows per-step (preemption-on-OutOfPages semantics); ``"reserve"`` keeps
+    the legacy worst-case ``prompt + max_new_tokens`` reservation at admit —
+    the static-admission baseline the kv_pressure benchmark compares
+    against."""
 
     def __init__(self, cfg: ArchConfig, device: DeviceSpec = TPU_V5E,
                  n_chips: int = 1, tokens_per_step: float = 3.8,
                  gamma: float = 0.95, decode_mode: str = "elastic",
                  kv_pool_pages: int = 1 << 16, page_size: int = 16,
                  obs: bool = False, obs_policy: str = "large_chunk",
-                 seed: int = 0, include_prefill: bool = True):
+                 seed: int = 0, include_prefill: bool = True,
+                 kv_admission: str = "incremental"):
         """obs_policy: the paper enables out-block streaming only for the
         largest chunk (§7.2) — "large_chunk" applies OBS when the scheduler
         picks chunk == block_size; "off"/"always" override."""
+        if kv_admission not in ("incremental", "reserve"):
+            raise ValueError(f"unknown kv_admission {kv_admission!r}")
         self.cfg = cfg
         self.analytic = AnalyticDeviceModel(cfg, device, n_chips)
         self.sim = CommitSimulator(tokens_per_step, gamma, cfg.block_size,
                                    cfg.confidence_threshold, seed)
         self.kv = PagedKVAllocator(kv_pool_pages, page_size)
+        self.kv_admission = kv_admission
+        self.grows_kv = kv_admission == "incremental"
         self.decode_mode = decode_mode
         self.obs = obs
         self.obs_policy = "always" if obs else obs_policy
@@ -123,8 +198,21 @@ class SimBackend:
         self._rng = np.random.default_rng(seed + 1)
 
     # ------------------------------------------------------------------
+    def admit_pages(self, req: Request) -> int:
+        """Pages claimed at admission — the cluster admission policy's
+        reservation unit (prompt-only under incremental growth)."""
+        if self.kv_admission == "reserve":
+            return self.kv.pages_for(req.prompt_len + req.max_new_tokens)
+        return self.kv.pages_for(req.prompt_len)
+
     def can_admit(self, req: Request) -> bool:
-        return self.kv.can_admit(req.prompt_len + req.max_new_tokens)
+        total = req.prompt_len + req.max_new_tokens
+        if self.kv_admission == "reserve":
+            return self.kv.can_admit(total)
+        # prompt pages must be free now; the full footprint must fit the
+        # pool *ever*, else a lone request could deadlock mid-decode
+        return (self.kv.pages_for(total) <= self.kv.n_pages
+                and self.kv.can_admit(req.prompt_len))
 
     def admit(self, req: Request) -> float:
         mode = _decode_mode_for(self.cfg, self.decode_mode)
@@ -138,7 +226,10 @@ class SimBackend:
                 mask_token=self.cfg.mask_token_id, eos_token=None,
                 mode=mode, obs=self.obs)
         self._states[req.rid] = st
-        self.kv.allocate(req.rid, req.prompt_len + req.max_new_tokens)
+        if self.kv_admission == "reserve":
+            self.kv.allocate(req.rid, req.prompt_len + req.max_new_tokens)
+        else:
+            self.kv.allocate(req.rid, req.prompt_len)
         if not self.include_prefill:
             return 0.0
         return self.analytic.step_latency(1, req.prompt_len,
@@ -151,8 +242,16 @@ class SimBackend:
     def state(self, rid: int):
         return self._states[rid]
 
+    def step_page_deficit(self, rids, chunk: int) -> int:
+        if self.kv_admission == "reserve" or not rids:
+            return 0
+        return _step_page_deficit(self.kv, self._states, rids, chunk)
+
     # ------------------------------------------------------------------
     def decode_step(self, rids, chunk: int):
+        if self.kv_admission == "incremental" and rids:
+            # transactional worst-case reservation BEFORE any state mutates
+            _reserve_step(self.kv, self._states, rids, chunk)
         infos = {}
         ctxs, eff_chunks = [], []
         for rid in rids:
@@ -182,6 +281,8 @@ class SimBackend:
                                   st.done)
             ctxs.append(st.prompt_len + st.frozen)
             eff_chunks.append(valid)
+        if self.kv_admission == "incremental":
+            _trim_step(self.kv, self._states, rids)
         b = max(1, len(rids))
         c_eff = max(1, int(round(float(np.mean(eff_chunks)))) if eff_chunks
                     else 1)
@@ -194,26 +295,27 @@ class SimBackend:
 # ===========================================================================
 
 class ModelBackend:
-    """Real-model backend (decoder-only families), dense-slot or paged.
+    """Real-model backend (decoder-only families).
 
-    **Dense-slot mode** (``paged=False``, deprecated — kept for one
-    release): a fixed ``n_slots``-row KV cache; all occupied slots advance
-    together each iteration with the scheduler-chosen chunk size; idle
-    slots are masked via win_valid = 0.  Hybrid block commits and rwkv AR
-    steps run through ``advance_states`` with a masked state-merge so
-    inactive slots' recurrent states are untouched.
-
-    **Paged mode** (``paged=True``; attention-only families): committed KV
-    lives in a :class:`PagedKVAllocator`-owned page pool read through block
-    tables by the Pallas chunked-paged-attention kernel (interpret mode /
-    ``ref`` oracle on CPU).  Admission is page-bounded (``can_admit`` asks
-    the allocator, not a slot list) so batch size is limited only by the
-    engine's ``max_batch`` and KV pages — the same memory-elastic semantics
-    as :class:`SimBackend`, giving cluster admission and the saturation
-    router one consistent KV-pressure signal.  Admitted prompts are
+    **Paged mode** (attention-only families — dense/moe/vlm; the default
+    and only mode for them): committed KV lives in a
+    :class:`PagedKVAllocator`-owned page pool read through block tables by
+    the Pallas chunked-paged-attention kernel (interpret mode / ``ref``
+    oracle on CPU).  Admission claims **prompt pages only**; each decode
+    step reserves its worst-case growth, freezes realized commits into the
+    pool, and trims the rest back — the same memory-elastic semantics as
+    :class:`SimBackend`, so cluster admission and the saturation router
+    read one KV-pressure signal for both.  Admitted prompts are
     *batch-prefilled* in one forward, deferred to the next decode step (an
     AR request therefore gets its prefill-derived first token at the end of
-    the first decode iteration instead of at admit time).
+    the first decode iteration instead of at admit time).  The old
+    dense-slot decode path for attention families was retired; requesting
+    ``paged=False`` for them raises.
+
+    **Recurrent-slot mode** (ssm/hybrid): recurrent states cannot be paged,
+    so these families keep a fixed ``n_slots``-row cache — rwkv AR steps and
+    hybrid block commits run through ``advance_states`` with a masked
+    state-merge so inactive slots' recurrent states are untouched.
     """
 
     def __init__(self, model, params, n_slots: int = 8, max_len: int = 512,
@@ -233,7 +335,9 @@ class ModelBackend:
         self.max_len = max_len
         self.decode_mode = decode_mode
         self.obs = obs
-        self.paged = self.cfg.paged_kv if paged is None else paged
+        supports = model.supports_paged()
+        self.paged = supports if paged is None else paged
+        self.grows_kv = self.paged
         self._states: dict[int, object] = {}
         self._req: dict[int, Request] = {}
 
@@ -241,8 +345,8 @@ class ModelBackend:
             model._check_paged()
             ps = page_size if page_size is not None else self.cfg.kv_page_size
             if kv_pages is None:
-                # mirror the dense cache's capacity by default so
-                # paged=True is a drop-in swap at equal memory
+                # mirror the historical dense cache's capacity by default so
+                # sizing stays comparable across releases
                 kv_pages = n_slots * (-(-max_len // ps))
             self.kv = PagedKVAllocator(kv_pages, ps)
             self.kv.init_storage(*model.paged_kv_dims(), dtype=cache_dtype)
@@ -255,12 +359,16 @@ class ModelBackend:
                 model.chunk_forward_paged, impl=impl, interpret=interpret))
             self._freeze_paged = jax.jit(model.freeze_paged)
         else:
+            if supports:
+                raise ValueError(
+                    "the dense-slot decode path for attention families was "
+                    "retired — ModelBackend serves attention-only families "
+                    "through the paged KV pool (drop paged=False)")
             self.kv = None
             self.cache = model.init_cache(n_slots, max_len, dtype=cache_dtype)
             self._slot_of: dict[int, int] = {}
             self._free_slots = list(range(n_slots - 1, -1, -1))
             self._chunk_fwd = jax.jit(model.chunk_forward)
-            self._freeze = jax.jit(model.freeze)
             self._advance = jax.jit(model.advance_states)
             self._prefill = jax.jit(self._prefill_impl)
             self._merge = jax.jit(self._merge_impl)
@@ -273,7 +381,7 @@ class ModelBackend:
             b *= 2
         return b
 
-    # -- jit bodies ------------------------------------------------------
+    # -- jit bodies (recurrent-slot mode) --------------------------------
     def _prefill_impl(self, params, cache, tokens, length, slot):
         """Prefill one request into its slot; returns (last-pos logits, cache)."""
         jnp = self.jnp
@@ -308,12 +416,18 @@ class ModelBackend:
         return self.jax.tree.map(one, old_states, new_states)
 
     # ------------------------------------------------------------------
+    def admit_pages(self, req: Request) -> int:
+        """Pages claimed at admission (prompt-only incremental growth)."""
+        return self.kv.pages_for(req.prompt_len) if self.paged else 0
+
     def can_admit(self, req: Request) -> bool:
         total = req.prompt_len + req.max_new_tokens
         if total > self.max_len:
             return False
         if self.paged:
-            return self.kv.can_admit(total)
+            # prompt pages free now; full footprint must fit the pool ever
+            return (self.kv.pages_for(total) <= self.kv.n_pages
+                    and self.kv.can_admit(req.prompt_len))
         return bool(self._free_slots)
 
     def _make_state(self, req: Request):
@@ -331,9 +445,10 @@ class ModelBackend:
         self._req[req.rid] = req
         self._states[req.rid] = st = self._make_state(req)
         if self.paged:
-            # reserve pages now; the prefill forward itself is deferred and
-            # batched with every other admission of this engine iteration
-            self.kv.allocate(req.rid, req.prompt_len + req.max_new_tokens)
+            # claim the prompt's pages only; decode steps grow the table
+            # incrementally.  The prefill forward itself is deferred and
+            # batched with every other admission of this engine iteration.
+            self.kv.allocate(req.rid, req.prompt_len)
             self._pending_prefill.append(req)
             return 0.0
 
@@ -383,40 +498,14 @@ class ModelBackend:
     def state(self, rid: int):
         return self._states[rid]
 
-    # ------------------------------------------------------------------
-    def _step_ar(self, ar_rids, infos):
-        """AR decode for attention families: window = last committed token,
-        causal logits predict the next one; its KV freezes immediately."""
-        jnp = self.jnp
-        B = self.n_slots
-        win = np.full((B, 1), self.cfg.mask_token_id, np.int64)
-        start = np.zeros(B, np.int64)
-        valid = np.zeros(B, np.int64)
-        n_adv = np.zeros(B, np.int64)
-        for rid in ar_rids:
-            st = self._states[rid]
-            slot = self._slot_of[rid]
-            win[slot, 0] = st.committed[st.frozen - 1]
-            start[slot] = st.prompt_len + st.frozen - 1
-            valid[slot] = 1
-            n_adv[slot] = 1
-        logits, win_kv = self._chunk_fwd(
-            self.params, self.cache, jnp.asarray(win, jnp.int32),
-            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32))
-        logits = np.asarray(logits)
-        if win_kv is not None:
-            self.cache = self._freeze(self.cache, win_kv,
-                                      jnp.asarray(start, jnp.int32),
-                                      jnp.asarray(n_adv, jnp.int32))
-        for rid in ar_rids:
-            st = self._states[rid]
-            slot = self._slot_of[rid]
-            _, tok = softmax_confidence(logits[slot, 0])
-            st.commit(int(tok))
-            infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
+    def step_page_deficit(self, rids, chunk: int) -> int:
+        if not self.paged or not rids:
+            return 0
+        return _step_page_deficit(self.kv, self._states, rids, chunk)
 
+    # ------------------------------------------------------------------
     def _step_ar_recurrent(self, ar_rids, infos):
-        """AR decode for recurrent (rwkv) family via advance_states."""
+        """AR decode for recurrent-slot families via advance_states."""
         jnp = self.jnp
         B = self.n_slots
         toks = np.full((B, 1), self.cfg.mask_token_id, np.int64)
@@ -585,23 +674,29 @@ class ModelBackend:
         if self.paged:
             self._flush_prefills()
             ar_rids, diff_rids = self._split_ar(rids, infos)
+            live = ar_rids + diff_rids
+            if live:
+                # worst-case page reservation; transactional OutOfPages
+                # (nothing mutated yet) lets the engine preempt + retry
+                _reserve_step(self.kv, self._states, live, chunk)
             if ar_rids:
                 self._step_ar_paged(ar_rids, infos)
             if diff_rids:
                 self._step_diffusion_paged(diff_rids, chunk, infos)
+            if live:
+                _trim_step(self.kv, self._states, live)
             return 0.0, infos
+
+        # recurrent-slot families (ssm AR, hybrid block-pinned diffusion)
         ar_rids, diff_rids = self._split_ar(rids, infos)
         if ar_rids:
-            if self.cfg.family == "ssm":
-                self._step_ar_recurrent(ar_rids, infos)
-            else:
-                self._step_ar(ar_rids, infos)
+            self._step_ar_recurrent(ar_rids, infos)
         if not diff_rids:
             return 0.0, infos
 
         jnp = self.jnp
         B = self.n_slots
-        c = chunk if self.cfg.family != "hybrid" else self.cfg.block_size
+        c = self.cfg.block_size          # hybrid windows pin to the block
         win = np.full((B, c), self.cfg.mask_token_id, np.int64)
         start = np.zeros(B, np.int64)
         valid = np.zeros(B, np.int64)
@@ -615,12 +710,11 @@ class ModelBackend:
             valid[slot] = v
             meta[rid] = (cai, v)
 
-        logits, win_kv = self._chunk_fwd(
+        logits, _ = self._chunk_fwd(
             self.params, self.cache, jnp.asarray(win, jnp.int32),
             jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32))
         logits = np.asarray(logits)
 
-        n_adv_arr = np.zeros(B, np.int64)
         block_commits = []
         for rid in diff_rids:
             st = self._states[rid]
@@ -628,19 +722,10 @@ class ModelBackend:
             cai, v = meta[rid]
             conf, tok = softmax_confidence(logits[slot, :c])
             commit_mask, n_adv = st.apply_step(conf, tok, v, cai)
-            if st.mode == "block_pinned":
-                if n_adv > 0:
-                    block_commits.append((rid, slot, n_adv))
-            else:
-                n_adv_arr[slot] = n_adv
-                st.advance(n_adv)
+            if n_adv > 0:
+                block_commits.append((rid, slot, n_adv))
             infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask, v,
                                   st.done)
-
-        if win_kv is not None and n_adv_arr.any():
-            self.cache = self._freeze(self.cache, win_kv,
-                                      jnp.asarray(start, jnp.int32),
-                                      jnp.asarray(n_adv_arr, jnp.int32))
 
         for rid, slot, n_adv in block_commits:
             st = self._states[rid]

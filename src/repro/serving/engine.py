@@ -2,11 +2,15 @@
 
 Every iteration: (1) admit arrived requests (FCFS, prefill-prioritized,
 KV-pool admission control — the baselines' policy, §7.1); (2) ask the
-scheduler for this iteration's chunk size given the live batch; (3) run one
-batched decode step; (4) feed realized commits back to the TU estimator;
-(5) retire finished requests.  This is the paper's finer-than-block
-"update the batch at every decoding iteration" scheduling (cf. LMDeploy),
-plus Optimus's chunk-size control loop.
+scheduler for this iteration's chunk size given the live batch *and the
+allocator's KV utilization* (memory-elastic chunking: smaller chunks commit
+fewer speculative tokens per page claimed); (3) ensure the batch's
+worst-case page growth fits — preempting victims (lowest priority, then
+most remaining work) on :class:`OutOfPages` pressure, Fan et al.'s
+evict+recompute; (4) run one batched decode step; (5) feed realized commits
+back to the TU estimator; (6) retire finished requests.  This is the
+paper's finer-than-block "update the batch at every decoding iteration"
+scheduling (cf. LMDeploy), plus Optimus's chunk-size control loop.
 
 The engine is split into a steppable :class:`EngineCore` — ``submit()`` /
 ``tick()`` / ``drain()`` against an externally owned clock — so a cluster
@@ -22,6 +26,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.serving.clock import VirtualClock
+from repro.serving.kv_pool import OutOfPages
 from repro.serving.request import Request, RequestMetrics
 
 
@@ -194,10 +199,22 @@ class EngineCore:
                 return i
         return -1
 
+    def _growth_headroom_ok(self, req: Request) -> bool:
+        """Anti-thrash gate for incremental-growth backends: admitting a
+        request must leave one free growth page per already-active request,
+        else a preempted victim re-admits straight into the pressure that
+        evicted it and the pool ping-pongs (evict → re-prefill → evict)."""
+        if not getattr(self.backend, "grows_kv", False):
+            return True
+        kv = self.backend.kv
+        free_after = kv.free_pages - self.backend.admit_pages(req)
+        return free_after >= len(self._active)
+
     def _admit(self, now: float):
         while len(self._active) < self.max_batch:
             i = self._next_admittable(now)
-            if i < 0 or not self.backend.can_admit(self._pending[i]):
+            if i < 0 or not self.backend.can_admit(self._pending[i]) \
+                    or not self._growth_headroom_ok(self._pending[i]):
                 break
             req = self._pending.pop(i)
             m = self._metrics.get(req.rid)
@@ -214,12 +231,74 @@ class EngineCore:
                 m.first_token_time = now     # AR: token from prefill
             self._active.append(req)
 
+    # -- memory preemption (OutOfPages pressure relief) --------------------
+    def _kv_utilization(self):
+        """Allocator utilization for memory-aware chunking — only for
+        backends with incremental page growth.  A static worst-case
+        reservation cannot run out mid-decode, so feeding its (always-high)
+        utilization to the scheduler would handicap chunk size for no
+        memory-safety benefit."""
+        if not getattr(self.backend, "grows_kv", False):
+            return None
+        kv = getattr(self.backend, "kv", None)
+        return kv.utilization if kv is not None else None
+
+    def _memory_victim(self) -> Request | None:
+        """Victim for memory preemption: lowest priority first, then most
+        remaining work (losing the least decode progress per page freed),
+        then latest arrival.  Never the last active request — a lone
+        request always fits (admission checks the full footprint against
+        the whole pool)."""
+        if len(self._active) <= 1:
+            return None
+
+        def remaining(req):
+            try:
+                done = self.backend.state(req.rid).n_committed
+            except KeyError:
+                done = 0
+            return req.max_new_tokens - done
+
+        return min(self._active,
+                   key=lambda r: (r.priority, -remaining(r),
+                                  -r.arrival_time, -r.rid))
+
+    def _preempt_for_memory(self) -> bool:
+        victim = self._memory_victim()
+        return victim is not None and self.preempt(victim.rid)
+
+    def _ensure_step_capacity(self, chunk: int):
+        """Preempt until the batch's worst-case page growth for the next
+        step fits the pool (no-op for backends without paged growth)."""
+        deficit = getattr(self.backend, "step_page_deficit", None)
+        if deficit is None:
+            return
+        while len(self._active) > 1:
+            rids = [r.rid for r in self._active]
+            if deficit(rids, chunk) <= 0:
+                return
+            if not self._preempt_for_memory():
+                return
+
     # -- one elastic decode iteration --------------------------------------
     def _decode_once(self):
         b = len(self._active)
-        chunk = self.scheduler.select(b)
-        rids = [r.rid for r in self._active]
-        latency, infos = self.backend.decode_step(rids, chunk)
+        try:
+            chunk = self.scheduler.select(b, kv_util=self._kv_utilization())
+        except TypeError:           # scheduler predates the memory signal
+            chunk = self.scheduler.select(b)
+        self._ensure_step_capacity(chunk)
+        while True:
+            rids = [r.rid for r in self._active]
+            try:
+                latency, infos = self.backend.decode_step(rids, chunk)
+                break
+            except OutOfPages:
+                # decode_step reserves before mutating, so the step never
+                # partially ran — preempt a victim and retry it
+                if not self._preempt_for_memory():
+                    raise
+        b = len(self._active)
         self.clock.advance(latency)
         self._busy += latency
         now = self.clock.now()
@@ -252,11 +331,18 @@ class EngineCore:
         self._active = still_active
         self.scheduler.observe(commit_masks, valids)
 
-    # -- preemption (cluster KV-pressure relief) ---------------------------
+    # -- preemption (cluster or memory KV-pressure relief) -----------------
     def preempt(self, rid: int) -> bool:
         """Evict an active request: release its backend state (freeing its
         KV pages) and requeue it for re-admission — it re-prefills from
-        scratch, losing decode progress (Fan et al.'s evict+recompute)."""
+        scratch, losing decode progress (Fan et al.'s evict+recompute).
+
+        Bookkeeping: TTFT stays measured from the request's FIRST admission
+        (the user saw that token; eviction doesn't un-serve it), while the
+        recompute cost is not free — the banked ``computed_tokens`` /
+        ``decode_steps`` keep the discarded work in token-utilization, and
+        re-admission charges the re-prefill latency to the replica clock
+        through ``backend.admit`` like any other prefill."""
         for i, req in enumerate(self._active):
             if req.rid == rid:
                 self._active.pop(i)
@@ -267,7 +353,6 @@ class EngineCore:
                 m.computed_tokens += st.computed_tokens
                 m.decode_steps += st.steps
                 m.preemptions += 1
-                m.first_token_time = -1.0    # progress discarded
                 self.backend.release(rid)
                 self.preemptions += 1
                 self.submit(req)

@@ -8,6 +8,13 @@ kernel consumes, stacked across attention layers).  Sim backends skip
 cluster admission and routers read one KV-pressure signal regardless of
 backend.  Admission control queries ``can_admit`` so continuous batching
 never over-commits HBM.
+
+Memory-elastic serving allocates *incrementally*: ``allocate`` claims only
+the prompt's pages at admission, each decode step ``extend``\\ s the table
+to the step's worst-case growth (raising :class:`OutOfPages` when the pool
+is exhausted — the engine's preemption trigger) and ``trim``\\ s the unused
+tail back afterwards, so a request only ever holds pages for KV it has
+actually frozen.
 """
 
 from __future__ import annotations
@@ -68,12 +75,30 @@ class PagedKVAllocator:
         self._lens[rid] = new_len
         return list(table)
 
+    def trim(self, rid: int, new_len: int):
+        """Shrink a request's allocation to cover ``new_len`` tokens,
+        returning now-unused tail pages to the pool.  Never grows: a
+        ``new_len`` at or above the current page count is a no-op, so the
+        step protocol (extend to worst case → decode → trim to realized
+        length) is safe to call unconditionally."""
+        table = self._tables[rid]
+        keep = self.pages_for(new_len)
+        while len(table) > keep:
+            self._free.append(table.pop())
+        self._lens[rid] = min(self._lens[rid], max(new_len, 0))
+        return list(table)
+
     def free(self, rid: int):
         self._free.extend(reversed(self._tables.pop(rid)))
         self._lens.pop(rid)
 
     def block_table(self, rid: int) -> list[int]:
         return list(self._tables[rid])
+
+    def table_len(self, rid: int) -> int:
+        """Pages currently held by ``rid`` — O(1), no table copy (the
+        per-step deficit scan calls this for every active request)."""
+        return len(self._tables[rid])
 
     def length(self, rid: int) -> int:
         return self._lens[rid]

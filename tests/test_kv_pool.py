@@ -52,6 +52,33 @@ def test_allocate_exhaustion_and_can_admit():
     assert kv.utilization == 1.0
 
 
+def test_trim_returns_tail_pages_and_never_grows():
+    kv = PagedKVAllocator(n_pages=8, page_size=16)
+    table = kv.allocate(0, 64)                # 4 pages
+    kept = kv.trim(0, 33)                     # 3 pages
+    assert kept == table[:3]
+    assert kv.free_pages == 5
+    assert kv.length(0) == 33
+    # trim up is a no-op (reservation protocol calls it unconditionally)
+    assert kv.trim(0, 64) == table[:3]
+    assert kv.free_pages == 5 and kv.length(0) == 33
+    kv.extend(0, 64)                          # grows back via extend
+    assert kv.free_pages == 4
+
+
+def test_extend_trim_roundtrip_is_transaction_safe():
+    """The step protocol's reserve→rollback path: extend to worst case,
+    trim back to the recorded length, allocator state is exactly restored."""
+    kv = PagedKVAllocator(n_pages=8, page_size=16)
+    kv.allocate(0, 40)
+    before_table, before_len = kv.block_table(0), kv.length(0)
+    kv.extend(0, 100)
+    kv.trim(0, before_len)
+    assert kv.block_table(0) == before_table
+    assert kv.length(0) == before_len
+    assert kv.free_pages == 8 - len(before_table)
+
+
 def test_free_returns_pages_for_reuse():
     kv = PagedKVAllocator(n_pages=4, page_size=16)
     t0 = kv.allocate(0, 64)

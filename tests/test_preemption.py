@@ -1,0 +1,296 @@
+"""Memory-elastic decoding: incremental page growth, preemption-on-
+OutOfPages, victim bookkeeping, memory-aware chunk selection, and the
+incremental-vs-reserve capacity win (ISSUE 3 acceptance)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ElasticScheduler, FixedScheduler
+from repro.core.latency_model import A100_80G
+from repro.models import ArchConfig
+from repro.serving import (DATASETS, EngineCore, PoissonWorkload,
+                           ServingEngine, SimBackend)
+from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
+
+CFG = ArchConfig(name="sim8b", family="dense", n_layers=36, d_model=4096,
+                 n_heads=32, n_kv_heads=8, d_ff=12288, vocab_size=151936,
+                 block_size=32)
+PROF = DATASETS["sharegpt"]
+
+
+def _backend(pages, adm="incremental", seed=13, include_prefill=True):
+    return SimBackend(CFG, A100_80G,
+                      tokens_per_step=PROF.tokens_per_step_bd32,
+                      kv_pool_pages=pages, seed=seed,
+                      include_prefill=include_prefill, kv_admission=adm)
+
+
+def _tight_workload(n=30, seed=13):
+    return list(PoissonWorkload(PROF, rate=64.0, n_requests=n, seed=seed,
+                                max_prompt=256, max_output=256))
+
+
+def _scheduler(be, mode="fixed", chunk=8):
+    if mode == "elastic":
+        return ElasticScheduler.from_analytic(
+            be.analytic, prior_tokens_per_step=PROF.tokens_per_step_bd32)
+    return FixedScheduler(chunk)
+
+
+# ---------------------------------------------------------------------------
+# preemption-on-OutOfPages: no leaks, full completion, correct accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["fixed", "elastic"])
+def test_tight_pool_preempts_and_completes_without_leaks(mode):
+    """A pool far too small for the workload's full footprints must force
+    mid-decode preemptions, yet every request completes its full output and
+    every page returns to the pool at drain."""
+    be = _backend(pages=128)
+    reqs = _tight_workload()
+    rep = ServingEngine(be, _scheduler(be, mode), max_batch=64).run(reqs)
+    assert rep.preemptions > 0
+    assert len(rep.metrics) == len(reqs)
+    want = {r.rid: r.max_new_tokens for r in reqs}
+    assert {m.rid: m.n_tokens for m in rep.metrics} == want
+    assert be.kv.free_pages == be.kv.n_pages           # no page leaks
+    assert not be.kv._tables and not be.kv._lens       # no stale bookkeeping
+    # discarded decode work is banked: preempted requests computed more
+    # than they kept
+    preempted = [m for m in rep.metrics if m.preemptions > 0]
+    assert preempted
+    for m in preempted:
+        assert m.computed_tokens > m.n_tokens
+
+
+def test_memory_victim_lowest_priority_most_remaining():
+    """Victim policy: lowest priority first, then most remaining work."""
+    be = _backend(pages=1 << 12, include_prefill=False)
+    core = EngineCore(be, FixedScheduler(8), max_batch=8)
+    reqs = _tight_workload(4, seed=5)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.0
+        r.priority = 1 if i < 2 else 0
+        r.max_new_tokens = 64 + 32 * i
+    core.submit_all(reqs)
+    core.tick()                                        # admit + first step
+    assert core.n_active == 4
+    victim = core._memory_victim()
+    # priority-0 pair is (reqs[2], reqs[3]); reqs[3] has more remaining
+    assert victim.rid == reqs[3].rid
+    assert core.preempt(victim.rid)
+    assert core.n_active == 3 and core.n_pending == 1
+    assert victim.rid not in be._states                # backend state freed
+
+
+def test_preempt_keeps_ttft_and_charges_recompute():
+    """Satellite: a preempted request's TTFT stays measured from its FIRST
+    token (first admission), while its re-prefill is re-charged to the
+    replica clock via backend.admit on re-admission."""
+    be = _backend(pages=1 << 12, include_prefill=True)
+    core = EngineCore(be, FixedScheduler(8), max_batch=4)
+    reqs = _tight_workload(2, seed=7)
+    for r in reqs:
+        r.arrival_time = 0.0
+    core.submit_all(reqs)
+    for _ in range(4):
+        core.tick()
+    rid = reqs[0].rid
+    m = core._metrics[rid]
+    ttft_before = m.first_token_time
+    assert ttft_before > 0
+    busy_before = core._busy
+    assert core.preempt(rid)
+    assert m.first_token_time == ttft_before           # TTFT from 1st admit
+    assert m.preemptions == 1
+    core.drain()
+    # re-admission re-ran a prefill: strictly more busy time than the two
+    # originals' prefills plus remaining decode alone would book
+    assert core._busy > busy_before
+    rep = core.report()
+    done = {x.rid: x for x in rep.metrics}
+    assert done[rid].first_token_time == ttft_before
+    assert done[rid].n_tokens == reqs[0].max_new_tokens
+
+
+def test_outofpages_backstop_retries_step():
+    """If decode_step itself raises OutOfPages (reservation races past the
+    deficit pre-check), the engine preempts and retries the step rather
+    than crashing."""
+    be = _backend(pages=1 << 12, include_prefill=False)
+    core = EngineCore(be, FixedScheduler(8), max_batch=8)
+    reqs = _tight_workload(3, seed=9)
+    for r in reqs:
+        r.arrival_time = 0.0
+    core.submit_all(reqs)
+    core.tick()
+    orig = be.decode_step
+    calls = {"n": 0}
+
+    def flaky(rids, chunk):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OutOfPages("injected")
+        return orig(rids, chunk)
+
+    be.decode_step = flaky
+    core.tick()                                        # survives + retries
+    assert calls["n"] == 2
+    assert core.preemptions == 1
+    be.decode_step = orig
+    core.drain()
+    assert len(core.report().metrics) == 3
+
+
+def test_step_page_deficit_is_exact():
+    """The engine's pre-step check and the backend's reservation agree: a
+    non-positive deficit guarantees the worst-case step fits."""
+    be = _backend(pages=64, include_prefill=False)
+    reqs = _tight_workload(3, seed=3)
+    for r in reqs:
+        r.prompt_len, r.max_new_tokens = 100, 300      # 7 prompt pages
+        be.admit(r)
+    rids = [r.rid for r in reqs]
+    d = be.step_page_deficit(rids, 32)
+    assert d <= 0                                      # plenty free
+    # shrink the pool artificially: grab pages with a squatter request
+    squat = 900
+    be.kv.allocate(squat, (be.kv.free_pages - 1) * be.kv.page_size)
+    assert be.step_page_deficit(rids, 32) > 0
+    with pytest.raises(OutOfPages):
+        be.decode_step(rids, 32)
+    # transactional: failed reservation rolled back, nothing double-booked
+    for rid in rids:
+        assert len(be.kv.block_table(rid)) == be.kv.pages_for(100)
+    be.kv.free(squat)
+    assert be.step_page_deficit(rids, 32) <= 0
+    be.decode_step(rids, 32)                           # now succeeds
+
+
+def test_model_backend_preempted_outputs_identical():
+    """Real-model backend: a tight page pool forces mid-decode preemption,
+    and every victim re-prefills and completes with committed tokens
+    IDENTICAL to an unpressured run (eviction must be invisible to
+    outputs)."""
+    import jax
+
+    from repro.models import ArchConfig, build_model
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                     block_size=8, confidence_threshold=0.6)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.serving import ModelBackend
+
+    def reqs():
+        rng = np.random.default_rng(2)
+        rs = list(PoissonWorkload(PROF, 50.0, 6, seed=2))
+        for r in rs:
+            r.arrival_time = 0.0
+            # 1-page prompts that grow to 4 pages: the admission gate lets
+            # several in on prompt pages, then growth outruns the pool
+            r.prompt_len, r.max_new_tokens = 16, 48
+            r.prompt_tokens = rng.integers(4, cfg.vocab_size, 16).tolist()
+        return rs
+
+    def run(pages):
+        be = ModelBackend(model, params, max_len=64, kv_pages=pages,
+                          page_size=16)
+        outs = {}
+        orig = be.release
+
+        def spy(rid):
+            outs[rid] = be.state(rid).output_tokens
+            orig(rid)
+
+        be.release = spy
+        rep = ServingEngine(be, FixedScheduler(8), max_batch=8).run(reqs())
+        assert be.kv.free_pages == be.kv.n_pages       # no page leaks
+        return rep, outs
+
+    rep_roomy, out_roomy = run(pages=64)               # never pressured
+    rep_tight, out_tight = run(pages=8)                # 6×4 pages > 8
+    assert rep_roomy.preemptions == 0
+    assert rep_tight.preemptions > 0
+    assert len(rep_tight.metrics) == 6
+    assert all(m.n_tokens == 48 for m in rep_tight.metrics)
+    assert out_tight == out_roomy                      # eviction invisible
+    preempted = [m for m in rep_tight.metrics if m.preemptions > 0]
+    assert preempted and all(m.computed_tokens > m.n_tokens
+                             for m in preempted)
+
+
+# ---------------------------------------------------------------------------
+# memory-aware chunk selection (acceptance: monotone degrade)
+# ---------------------------------------------------------------------------
+
+def test_memory_aware_chunks_degrade_monotonically():
+    be = _backend(pages=1 << 12)
+    utils = np.linspace(0.0, 1.0, 21)
+    caps, picks = [], []
+    for u in utils:
+        sch = _scheduler(be, "elastic")                # fresh: no hysteresis
+        caps.append(sch.memory_cap(float(u)))
+        picks.append(sch.select(8, kv_util=float(u)))
+    assert all(a >= b for a, b in zip(caps, caps[1:]))
+    assert all(p <= c for p, c in zip(picks, caps))
+    assert caps[0] == max(sch.candidates)
+    assert caps[-1] == min(sch.candidates)
+    # picks under memory pressure never exceed the unpressured pick
+    assert all(p <= picks[0] for p in picks)
+
+
+def test_select_without_kv_signal_unchanged():
+    be = _backend(pages=1 << 12)
+    s1, s2 = _scheduler(be, "elastic"), _scheduler(be, "elastic")
+    for b in (1, 4, 32, 128):
+        assert s1.select(b) == s2.select(b, kv_util=0.0)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: incremental growth + preemption beats worst-case reservation
+# ---------------------------------------------------------------------------
+
+def test_incremental_beats_reserve_under_pressure():
+    """Pool sized so worst-case reservation admits only a handful: the
+    memory-elastic path must sustain a strictly higher concurrent batch AND
+    strictly higher goodput, with identical committed tokens per request
+    and a fully drained pool."""
+    reqs = _tight_workload()
+    results = {}
+    for adm in ("reserve", "incremental"):
+        be = _backend(pages=128, adm=adm)
+        rep = ServingEngine(be, _scheduler(be, "fixed"),
+                            max_batch=64).run(_tight_workload())
+        assert be.kv.free_pages == be.kv.n_pages
+        results[adm] = rep
+    res, inc = results["reserve"], results["incremental"]
+    want = {r.rid: r.max_new_tokens for r in reqs}
+    assert {m.rid: m.n_tokens for m in res.metrics} == want
+    assert {m.rid: m.n_tokens for m in inc.metrics} == want
+    assert max(inc.batch_history) > max(res.batch_history)
+    assert inc.throughput > res.throughput
+    assert inc.preemptions > 0 and res.preemptions == 0
+
+
+def test_memory_aware_cap_earns_its_keep_elastic():
+    """With elastic scheduling at moderate pool pressure, the emergency-
+    brake chunk cap must beat running uncapped (which thrashes on
+    preemptions) — the memory signal buys goodput, not just safety — while
+    still sustaining a higher concurrent batch than worst-case
+    reservation."""
+    def run(adm, capped=True):
+        be = _backend(pages=256, adm=adm)
+        sch = _scheduler(be, "elastic")
+        if not capped:
+            sch.memory_lo = sch.memory_hi = 1.1      # cap never engages
+        rep = ServingEngine(be, sch, max_batch=256).run(_tight_workload(60))
+        assert be.kv.free_pages == be.kv.n_pages
+        return rep
+
+    reserve = run("reserve")
+    capped = run("incremental", capped=True)
+    uncapped = run("incremental", capped=False)
+    assert max(capped.batch_history) > max(reserve.batch_history)
+    assert capped.throughput > uncapped.throughput
+    assert capped.preemptions < uncapped.preemptions

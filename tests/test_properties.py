@@ -119,22 +119,52 @@ def test_kv_pool_invariants(ops):
     assert pool.free_pages == 64
 
 
-@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free",
+                                           "trim", "preempt"]),
                           st.integers(1, 300)),
                 min_size=1, max_size=80))
 @settings(max_examples=100, deadline=None)
 def test_kv_pool_alloc_extend_free_invariants(ops):
-    """Arbitrary allocate/extend/free interleavings: the free-page
-    invariant holds, ``extend`` never double-books a page, and OutOfPages
-    is raised exactly when pages_for(n) exceeds free_pages."""
+    """Arbitrary allocate/extend/free/trim/preempt interleavings: the
+    free-page invariant holds, no page is ever double-booked, ``trim``
+    returns exactly the tail pages, ``preempt`` (evict + prompt-sized
+    re-admission, the engine's memory-preemption path) conserves pages, and
+    OutOfPages is raised exactly when pages_for(n) exceeds free_pages."""
     pool = PagedKVAllocator(n_pages=48, page_size=16)
     live: dict[int, int] = {}                  # rid → current token len
+    prompt: dict[int, int] = {}                # rid → admission (prompt) len
     rid = 0
     for op, n_tokens in ops:
         if op == "free" and live:
             victim = next(iter(live))
             pool.free(victim)
             del live[victim]
+            del prompt[victim]
+        elif op == "trim" and live:
+            target = next(iter(live))
+            new_len = min(live[target], n_tokens)
+            table = pool.trim(target, new_len)
+            assert len(table) == pool.pages_for(new_len)
+            live[target] = min(live[target], new_len)
+        elif op == "preempt" and live:
+            # evict the victim (pages fully returned), then re-admit it at
+            # its prompt footprint — exactly what EngineCore.preempt +
+            # re-admission do to the allocator
+            victim = max(live)
+            before = pool.free_pages
+            held = len(pool.block_table(victim))
+            pool.free(victim)
+            assert pool.free_pages == before + held        # fully freed
+            del live[victim]
+            p = prompt.pop(victim)
+            need = pool.pages_for(p)
+            if need > pool.free_pages:
+                with pytest.raises(OutOfPages):
+                    pool.allocate(victim, p)
+            else:
+                assert len(pool.allocate(victim, p)) == need
+                live[victim] = p
+                prompt[victim] = p
         elif op == "extend" and live:
             target = next(iter(live))
             new_len = max(live[target], n_tokens)
@@ -158,6 +188,7 @@ def test_kv_pool_alloc_extend_free_invariants(ops):
             else:
                 assert len(pool.allocate(rid, n_tokens)) == need
                 live[rid] = n_tokens
+                prompt[rid] = n_tokens
             rid += 1
         # global invariants after every operation
         owned = [p for r in live for p in pool.block_table(r)]
