@@ -1,0 +1,238 @@
+"""Decode hot-path microbenchmark: fused donated step vs the pre-fusion pair.
+
+Drives the paged :class:`~repro.serving.backends.ModelBackend` directly
+(admit a fixed batch, then step to completion) and measures, per decode
+iteration in steady state (the admission wave / jit-compile steps are
+excluded):
+
+* ``wall_ms``            — mean wall-clock of ``backend.decode_step``;
+* ``dispatches_per_step``— jitted device dispatches issued per iteration
+                           (fused: 1 = chunk+freeze+sample in one call;
+                           pre-fusion: chunk + freeze = 2);
+* ``host_bytes_per_step``— device→host bytes pulled per iteration (fused:
+                           ``2·B·c`` scalars — conf fp32 + token int32;
+                           pre-fusion: the full ``[B, c, V]`` fp32 logits);
+* ``pool_bytes``         — steady-state device page-pool footprint
+                           (``k_pages`` + ``v_pages``; with donation the
+                           step updates it in place instead of doubling it);
+* ``donation_aliased``   — the compiled fused step's HLO maps the page-pool
+                           inputs onto its outputs (``input_output_alias``),
+                           i.e. no per-step full-pool copy;
+* ``tokens_match``       — fused and pre-fusion runs committed bit-identical
+                           tokens.
+
+Swept over AR (c = 1) and diffusion (slide) modes on a B×c grid.  Off-TPU
+the attention implementation defaults to the pure-jnp ``ref`` oracle so the
+grid finishes quickly (interpret-mode Pallas wall time is not
+TPU-representative anyway); pass ``--impl kernel`` to time the kernel path.
+
+Writes ``BENCH_decode_step.json`` at the repo root (and a CSV under
+``benchmarks/out/``):
+
+    PYTHONPATH=src python -m benchmarks.decode_step_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import time
+
+import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_JSON = os.path.join(REPO_ROOT, "BENCH_decode_step.json")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+GRID = [  # (batch, chunk) — diffusion sweeps c, AR always steps at c=1
+    (1, 8),
+    (4, 8),
+    (4, 16),
+    (8, 8),
+    (16, 8),
+]
+QUICK_GRID = GRID[:3]
+
+PROMPT, GEN = 16, 48
+VOCAB = 512
+
+
+def _build(attn_impl: str):
+    import jax
+
+    from repro.models import ArchConfig, build_model
+    cfg = ArchConfig(name="decode-bench", family="dense", n_layers=2,
+                     d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                     vocab_size=VOCAB, block_size=8,
+                     confidence_threshold=0.6)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, B: int, seed: int = 0):
+    from repro.serving.request import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival_time=0.0, prompt_len=PROMPT,
+                    max_new_tokens=GEN,
+                    prompt_tokens=rng.integers(4, cfg.vocab_size,
+                                               PROMPT).tolist())
+            for i in range(B)]
+
+
+def bench_case(model, params, mode: str, B: int, c: int, fused: bool,
+               attn_impl: str, warmup: int = 2):
+    """Step one fixed batch to completion; return (stats, outputs)."""
+    from repro.serving import ModelBackend
+    cfg = model.cfg
+    be = ModelBackend(model, params, max_len=PROMPT + GEN + cfg.block_size,
+                      kv_pages=4 * B * ((PROMPT + GEN) // 16 + 2),
+                      decode_mode=mode, attn_impl=attn_impl, fused=fused)
+    for r in _requests(cfg, B):
+        be.admit(r)
+    rids = list(range(B))
+    chunk = 1 if mode == "ar" else c
+    wall, steps, measured = 0.0, 0, 0
+    d_at, b_at = 0, 0
+    d_meas, b_meas = 0, 0
+    while not all(be.state(r).done for r in rids):
+        # steady state = full live batch, past compile/prefill warmup;
+        # drain steps (some requests done → smaller dispatches) excluded
+        full = not any(be.state(r).done for r in rids)
+        if steps == warmup:
+            d_at, b_at = be.decode_dispatches, be.host_transfer_bytes
+        t0 = time.perf_counter()
+        be.decode_step(rids, chunk)
+        dt = time.perf_counter() - t0
+        if steps >= warmup and full:
+            wall += dt
+            measured += 1
+            d_meas = be.decode_dispatches - d_at
+            b_meas = be.host_transfer_bytes - b_at
+        steps += 1
+    outs = {r: be.state(r).output_tokens for r in rids}
+    stats = {
+        "steps": steps,
+        "measured_steps": measured,
+        "wall_ms": wall / max(measured, 1) * 1e3,
+        "dispatches_per_step": d_meas / max(measured, 1),
+        "host_bytes_per_step": b_meas / max(measured, 1),
+        "pool_bytes": int(be.kv.k_pages.nbytes + be.kv.v_pages.nbytes),
+    }
+    return stats, outs
+
+
+def fused_step_aliasing(model, params, B: int = 2, c: int = 4,
+                        attn_impl: str = "ref") -> dict:
+    """Compile the fused step standalone and inspect its HLO aliasing."""
+    import functools
+    import sys
+
+    import jax
+    import jax.numpy as jnp
+
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    from benchmarks.hlo_analysis import input_output_aliases
+
+    cfg = model.cfg
+    W = 8
+    # interpret=None resolves exactly like the serving backend's jit does
+    # (compiled on TPU, interpret elsewhere) — the aliasing certificate must
+    # come from the same program the server runs
+    step = jax.jit(functools.partial(model.decode_step_paged, impl=attn_impl,
+                                     interpret=None), donate_argnums=(1,))
+    cache = model.init_paged_cache(B * W, cfg.kv_page_size)
+    lowered = step.lower(
+        params, cache,
+        jnp.zeros((B, c), jnp.int32), jnp.zeros(B, jnp.int32),
+        jnp.zeros(B, jnp.int32),
+        jnp.zeros((B, W), jnp.int32), jnp.zeros(B, jnp.int32),
+        jnp.zeros(B, jnp.int32))
+    aliases = input_output_aliases(lowered.compile().as_text())
+    pool_elems = int(np.prod(cache["k_pages"].shape))
+    return {"n_aliased": len(aliases),
+            # the two pool buffers must be among the aliased pairs
+            "pool_aliased": len(aliases) >= 2,
+            "pool_elems_per_buffer": pool_elems}
+
+
+def run_bench(quick: bool = False, attn_impl: str | None = None,
+              verbose: bool = True):
+    import jax
+    if attn_impl is None:
+        attn_impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    cfg, model, params = _build(attn_impl)
+    rows = []
+    for mode in ("diffusion", "ar"):
+        grid = QUICK_GRID if quick else GRID
+        if mode == "ar":  # chunk is degenerate for AR; dedupe batches
+            grid = sorted({(b, 1) for b, _ in grid})
+        for B, c in grid:
+            decode_mode = "ar" if mode == "ar" else "elastic"
+            fstats, fouts = bench_case(model, params, decode_mode, B, c,
+                                       True, attn_impl)
+            pstats, pouts = bench_case(model, params, decode_mode, B, c,
+                                       False, attn_impl)
+            row = {"mode": mode, "batch": B, "chunk": c,
+                   "tokens_match": fouts == pouts,
+                   "logits_bytes_per_step": 4 * B * c * cfg.vocab_size,
+                   **{f"fused_{k}": v for k, v in fstats.items()},
+                   **{f"prefusion_{k}": v for k, v in pstats.items()}}
+            rows.append(row)
+            if verbose:
+                print(f"{mode:9s} B={B:3d} c={c:3d}  "
+                      f"disp {fstats['dispatches_per_step']:.2f} vs "
+                      f"{pstats['dispatches_per_step']:.2f}  "
+                      f"hostB {fstats['host_bytes_per_step']:.0f} vs "
+                      f"{pstats['host_bytes_per_step']:.0f}  "
+                      f"wall {fstats['wall_ms']:.2f} vs "
+                      f"{pstats['wall_ms']:.2f} ms  "
+                      f"match={row['tokens_match']}")
+    alias = fused_step_aliasing(model, params, attn_impl=attn_impl)
+    payload = {
+        "bench": "decode_step",
+        "backend": jax.default_backend(),
+        "attn_impl": attn_impl,
+        "note": ("off-TPU wall time uses the jnp ref attention path; "
+                 "dispatch/host-transfer/aliasing structure is "
+                 "backend-independent"),
+        "donation": alias,
+        "donation_aliased": alias["pool_aliased"],
+        "results": rows,
+        "summary": {
+            "all_tokens_match": all(r["tokens_match"] for r in rows),
+            "fused_dispatches_per_step":
+                max(r["fused_dispatches_per_step"] for r in rows),
+            "prefusion_dispatches_per_step":
+                min(r["prefusion_dispatches_per_step"] for r in rows),
+            "host_transfer_reduction":
+                float(np.mean([r["prefusion_host_bytes_per_step"] /
+                               max(r["fused_host_bytes_per_step"], 1)
+                               for r in rows])),
+        },
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "decode_step_bench.csv"), "w",
+              newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", default=None, choices=[None, "ref", "kernel"])
+    args = ap.parse_args()
+    run_bench(quick=args.quick, attn_impl=args.impl)
+    print(f"wrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    main()

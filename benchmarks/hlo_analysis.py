@@ -205,6 +205,50 @@ def _fusion_traffic(comp: _Comp) -> int:
     return read + write
 
 
+_ALIAS_ENTRY = re.compile(
+    r"\{([0-9,\s]*)\}\s*:\s*\((\d+),\s*\{([0-9,\s]*)\}\s*(?:,\s*([\w-]+))?\)")
+
+
+def _idx(csv: str) -> tuple:
+    return tuple(int(x) for x in csv.replace(" ", "").split(",") if x)
+
+
+def input_output_aliases(text: str) -> list:
+    """Parse the module-level ``input_output_alias`` annotation of an
+    optimized HLO dump.
+
+    Returns ``[{output_index, param_number, param_index, kind}, ...]`` —
+    one entry per output buffer XLA will write in place over an input
+    (``param_number`` counts *flattened* entry parameters).  Donated jit
+    arguments that XLA accepted show up here; an empty list means every
+    output gets a fresh allocation (no donation landed).  This is the
+    assertion surface for the decode-step donation contract: the page pool
+    must alias through prefill/decode or each step copies the whole pool.
+    """
+    key = "input_output_alias={"
+    start = text.find(key)
+    if start < 0:
+        return []
+    i = start + len(key) - 1
+    depth = 0
+    inner = None
+    for j in range(i, len(text)):
+        if text[j] == "{":
+            depth += 1
+        elif text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                inner = text[i + 1:j]
+                break
+    if inner is None:
+        return []
+    return [{"output_index": _idx(m.group(1)),
+             "param_number": int(m.group(2)),
+             "param_index": _idx(m.group(3)),
+             "kind": m.group(4) or "may-alias"}
+            for m in _ALIAS_ENTRY.finditer(inner)]
+
+
 def analyze(text: str) -> dict:
     comps, fusion_bodies, entry = parse_hlo(text)
     memo: dict[str, dict] = {}

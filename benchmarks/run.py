@@ -509,6 +509,23 @@ def kv_pressure(quick=False):
          f"{s['cap_gain_elastic_pages']} pages")
 
 
+def decode_step(quick=False):
+    """Fused donated decode step vs pre-fusion → BENCH_decode_step.json
+    (see benchmarks/decode_step_bench)."""
+    from benchmarks.decode_step_bench import run_bench
+    payload = run_bench(quick=quick, verbose=False)
+    s = payload["summary"]
+    emit("decode_step.fused_dispatches_per_step",
+         f"{s['fused_dispatches_per_step']:.2f}",
+         f"pre-fusion AR pair was 2; donation_aliased="
+         f"{payload['donation_aliased']}")
+    emit("decode_step.host_transfer_reduction",
+         f"{s['host_transfer_reduction']:.0f}x",
+         "B*c*V logits -> 2*B*c scalars; full grid in BENCH_decode_step.json")
+    emit("decode_step.tokens_match", str(s["all_tokens_match"]).lower(),
+         "fused and pre-fusion commit bit-identical tokens")
+
+
 ALL = {
     "table2": table2_profiles,
     "fig1": fig1_load_sensitivity,
@@ -525,6 +542,7 @@ ALL = {
     "cluster": cluster,
     "paged_attn": paged_attn,
     "kv_pressure": kv_pressure,
+    "decode_step": decode_step,
 }
 
 

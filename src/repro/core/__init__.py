@@ -1,9 +1,11 @@
 """The paper's primary contribution: streaming chunked decoding +
 saturation-aware elastic scheduling for diffusion LLM serving."""
 
-from repro.core.chunked import ChunkedDecodeState
-from repro.core.diffusion import (DecodeTrace, block_decode_reference,
-                                  commit_decisions, softmax_confidence)
+from repro.core.chunked import (ChunkedDecodeState, batch_apply_step,
+                                batch_windows, freeze_run)
+from repro.core.diffusion import (DecodeTrace, batch_commit_decisions,
+                                  block_decode_reference, commit_decisions,
+                                  softmax_confidence)
 from repro.core.latency_model import (A100_80G, TPU_V5E, AnalyticDeviceModel,
                                       DeviceSpec,
                                       PiecewiseAffineLatencyModel)
@@ -12,7 +14,8 @@ from repro.core.scheduler import (DEFAULT_CHUNKS, ElasticScheduler,
 from repro.core.tu_model import TokenUtilEstimator
 
 __all__ = [
-    "ChunkedDecodeState", "DecodeTrace", "block_decode_reference",
+    "ChunkedDecodeState", "batch_apply_step", "batch_windows", "freeze_run",
+    "DecodeTrace", "batch_commit_decisions", "block_decode_reference",
     "commit_decisions", "softmax_confidence", "AnalyticDeviceModel",
     "DeviceSpec", "PiecewiseAffineLatencyModel", "TPU_V5E", "A100_80G",
     "ElasticScheduler", "FixedScheduler", "TokenUtilEstimator",

@@ -31,7 +31,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.diffusion import commit_decisions
+from repro.core.diffusion import batch_commit_decisions, commit_decisions
 
 UNSET = -1
 
@@ -162,3 +162,100 @@ class ChunkedDecodeState:
     @property
     def token_utilization(self) -> float:
         return self.n_committed / max(self.computed_tokens, 1)
+
+
+# ===========================================================================
+# Batched host-side decode logic (the serving hot path)
+#
+# Backends step many requests per iteration; the per-request ``window()`` /
+# ``apply_step()`` pair costs a Python loop per request plus a Python loop
+# per window position.  The batched variants below compute the same
+# quantities across the live batch with numpy array ops — only a single
+# variable-length slice copy (window) / index-assignment (commit writeback)
+# per row remains, because each state owns its own ``committed`` array.
+# Slide-mode only: block-pinned (hybrid) windows have a different width per
+# step and stay on the scalar path.
+# ===========================================================================
+
+def batch_windows(states, chunk_size: int):
+    """Vectorized ``window(chunk_size)`` over slide-mode states.
+
+    Returns (tokens [B, c] int64, start [B] int64, valid [B] int64,
+    committed_at_input [B, c] bool) — row ``i`` is exactly
+    ``states[i].window(chunk_size)``.
+    """
+    B, c = len(states), chunk_size
+    frozen = np.fromiter((s.frozen for s in states), np.int64, B)
+    prompt = np.fromiter((s.prompt_len for s in states), np.int64, B)
+    gen_limit = np.fromiter((s.gen_limit for s in states), np.int64, B)
+    bs = np.fromiter((s.block_size for s in states), np.int64, B)
+    obs = np.fromiter((s.obs for s in states), bool, B)
+    start = prompt + frozen
+    limit = gen_limit - frozen
+    blk_end = (start // bs + 1) * bs
+    limit = np.where(obs, limit, np.minimum(limit, blk_end - start))
+    valid = np.maximum(0, np.minimum(c, limit))
+    toks = np.empty((B, c), np.int64)
+    toks[:] = np.fromiter((s.mask_token for s in states), np.int64,
+                          B)[:, None]
+    cai = np.zeros((B, c), bool)
+    for i, s in enumerate(states):
+        v = int(valid[i])
+        if v:
+            sl = s.committed[s.frozen:s.frozen + v]
+            known = sl != UNSET
+            toks[i, :v][known] = sl[known]
+            cai[i, :v] = known
+    return toks, start, valid, cai
+
+
+def freeze_run(valid: np.ndarray, cai: np.ndarray) -> np.ndarray:
+    """Length of each row's leading committed-at-input run — how many
+    window KV entries may be frozen after the step (``n_advance``).
+
+    Computable BEFORE the step runs: the run counts positions committed in
+    *earlier* steps, and an EOS committed this step always lands at or past
+    the first uncommitted position, so it can never clamp the run (windows
+    are already clamped to ``gen_limit``).  This is what lets the fused
+    device step freeze window KV in the same dispatch that computes it.
+    """
+    stop = ~cai | (np.arange(cai.shape[1])[None, :] >= valid[:, None])
+    return np.where(stop.any(axis=1), stop.argmax(axis=1), valid)
+
+
+def batch_apply_step(states, conf, tok, valid: np.ndarray, cai: np.ndarray):
+    """Vectorized ``apply_step`` over slide-mode states.
+
+    conf/tok [B, c]; valid/cai from :func:`batch_windows`.  Returns
+    (commit_mask [B, c] bool, n_advance [B] int64); each state's
+    ``committed`` / ``gen_limit`` / step counters are updated exactly as
+    its scalar ``apply_step`` would.  Rows with ``valid == 0`` are no-ops
+    (the scalar path is never invoked for them), matching the backends'
+    skip behaviour.
+    """
+    B, c = cai.shape
+    conf = np.asarray(conf, np.float64)
+    live = valid > 0
+    validm = np.arange(c)[None, :] < valid[:, None]
+    uncommitted = validm & ~cai
+    thresholds = np.fromiter((s.threshold for s in states), np.float64, B)
+    commit = batch_commit_decisions(conf, uncommitted, thresholds)
+
+    for i in np.nonzero(live)[0]:
+        s = states[i]
+        idx = np.nonzero(commit[i])[0]
+        if idx.size:
+            s.committed[s.frozen + idx] = tok[i, idx]
+            if s.eos_token is not None:
+                eos = idx[np.asarray(tok[i, idx]) == s.eos_token]
+                if eos.size:
+                    s.gen_limit = min(s.gen_limit, s.frozen + int(eos[0]) + 1)
+        s.steps += 1
+        s.computed_tokens += int(valid[i])
+        s.committed_history.append(int(idx.size))
+
+    n_adv = freeze_run(valid, cai)
+    gen_limit = np.fromiter((s.gen_limit for s in states), np.int64, B)
+    frozen = np.fromiter((s.frozen for s in states), np.int64, B)
+    n_adv = np.where(live, np.minimum(n_adv, gen_limit - frozen), 0)
+    return commit, n_adv

@@ -52,6 +52,26 @@ def commit_decisions(conf: np.ndarray, uncommitted: np.ndarray,
     return commit
 
 
+def batch_commit_decisions(conf: np.ndarray, uncommitted: np.ndarray,
+                           thresholds: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`commit_decisions` over a batch.
+
+    conf [B, W] fp64, uncommitted [B, W] bool, thresholds [B].
+    Row semantics are identical to the scalar rule: commit every
+    uncommitted position above the row's threshold; rows with uncommitted
+    positions but no qualifier commit their single highest-confidence
+    uncommitted position (numpy argmax tie-break: first maximal index).
+    """
+    conf = np.asarray(conf, np.float64)
+    commit = (conf > np.asarray(thresholds)[:, None]) & uncommitted
+    fallback = ~commit.any(axis=1) & uncommitted.any(axis=1)
+    if fallback.any():
+        masked = np.where(uncommitted, conf, -np.inf)
+        rows = np.nonzero(fallback)[0]
+        commit[rows, masked[rows].argmax(axis=1)] = True
+    return commit
+
+
 @dataclass
 class DecodeTrace:
     """Per-request record of a decode run (for TU accounting and tests)."""

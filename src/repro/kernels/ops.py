@@ -20,6 +20,34 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def softmax_confidence_device(logits):
+    """On-device argmax + softmax top-probability: logits [..., V] →
+    (confidence [...] fp32, token [...] int32).
+
+    The device half of the fused decode step: instead of shipping the full
+    ``[B, c, V]`` logits to the host for fp64 ``softmax_confidence``, the
+    argmax and its softmax probability are reduced on device and only
+    ``2·B·c`` scalars cross PCIe.  Argmax over logits equals argmax over
+    softmax probabilities (monotone map), and both XLA and numpy break ties
+    at the first maximal index, so committed tokens are bit-identical to
+    the host path; confidence is fp32 (vs fp64 on host), which only matters
+    when a confidence lands within float error of the commit threshold.
+    Traceable — call inside a jitted step (``decode_step_paged``) or via
+    the jitted wrapper below.
+    """
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    tok = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    conf = jnp.take_along_axis(p, tok[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    return conf, tok
+
+
+softmax_confidence_op = jax.jit(softmax_confidence_device)
+
+
 @partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_chunk_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
                           scale=None, interpret=None):

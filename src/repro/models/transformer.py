@@ -671,6 +671,37 @@ class TransformerLM:
                 "v_pages": _scatter_pages(cache["v_pages"], win_kv["v"],
                                           dest)}
 
+    def decode_step_paged(self, params, cache, win_tokens, win_start,
+                          win_valid, block_tables, ctx_lens, n_adv, *,
+                          impl: str = "kernel", interpret=None,
+                          mm_embeds=None, mm_mask=None):
+        """One fused paged decode iteration: chunk-forward + freeze +
+        on-device sampling in a single dispatch.
+
+        Composes :meth:`chunk_forward_paged`, :meth:`freeze_paged` and the
+        device softmax-confidence/argmax reduction
+        (:func:`repro.kernels.ops.softmax_confidence_device`) so one jitted
+        call per step replaces the chunk + freeze pair, and only
+        ``2·B·c`` scalars (confidence fp32, token int32) return to the
+        host instead of the full ``[B, c, V]`` logits.
+
+        ``n_adv`` [B] is the number of leading window KV entries to freeze
+        — precomputable before the step for slide-mode windows (the leading
+        committed-at-input run; see :func:`repro.core.chunked.freeze_run`)
+        and always 1 for AR rows.  Jit with ``donate_argnums=(1,)`` so the
+        page pool aliases in place instead of being copied every step.
+        Returns (conf [B, c], tok [B, c], new page cache).
+        """
+        from repro.kernels.ops import softmax_confidence_device
+        logits, win_kv = self.chunk_forward_paged(
+            params, cache, win_tokens, win_start, win_valid, block_tables,
+            ctx_lens, impl=impl, interpret=interpret,
+            mm_embeds=mm_embeds, mm_mask=mm_mask)
+        new_cache = self.freeze_paged(cache, win_kv, block_tables,
+                                      win_start, n_adv)
+        conf, tok = softmax_confidence_device(logits)
+        return conf, tok, new_cache
+
     def advance_states(self, params, cache, tokens, lengths,
                        mm_embeds=None, mm_mask=None):
         """Advance recurrent states (and attention KV) over committed

@@ -33,7 +33,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.chunked import ChunkedDecodeState
+from repro.core.chunked import (ChunkedDecodeState, batch_apply_step,
+                                batch_windows, freeze_run)
 from repro.core.diffusion import softmax_confidence
 from repro.core.latency_model import AnalyticDeviceModel, DeviceSpec, TPU_V5E
 from repro.models.common import ArchConfig
@@ -248,39 +249,78 @@ class SimBackend:
         return _step_page_deficit(self.kv, self._states, rids, chunk)
 
     # ------------------------------------------------------------------
+    def _step_slide_batched(self, rids, states, chunk, infos, ctxs,
+                            eff_chunks):
+        """Slide-mode step, vectorized across the batch via
+        ``batch_windows`` / ``batch_apply_step``.  RNG consumption stays in
+        rid order with the same draw sizes as the historical per-rid loop,
+        so sim trajectories are bit-identical."""
+        obs = (self.obs_policy == "always" or
+               (self.obs_policy == "large_chunk"
+                and chunk >= self.cfg.block_size))
+        for st in states:
+            st.obs = obs
+        win, _, valid, cai = batch_windows(states, chunk)
+        B, c = win.shape
+        validm = np.arange(c)[None, :] < valid[:, None]
+        unc = validm & ~cai
+        first_unc = np.where(unc.any(axis=1), unc.argmax(axis=1), valid)
+        depths = np.maximum(np.arange(c)[None, :] - first_unc[:, None], 0)
+        conf = np.zeros((B, c))
+        tok = np.zeros((B, c), np.int64)
+        for i in np.nonzero(valid > 0)[0]:
+            conf[i] = self.sim.confidences(depths[i])
+            tok[i] = self._rng.integers(5, 1000, size=c)
+        commit, n_adv = batch_apply_step(states, conf, tok, valid, cai)
+        for i, (rid, st) in enumerate(zip(rids, states)):
+            if valid[i] == 0:
+                infos[rid] = StepInfo(0, np.zeros(c, bool), 0, st.done)
+                ctxs.append(st.prompt_len + st.frozen)
+                continue
+            st.advance(int(n_adv[i]))
+            infos[rid] = StepInfo(int(commit[i].sum()), commit[i],
+                                  int(valid[i]), st.done)
+            ctxs.append(st.prompt_len + st.frozen)
+            eff_chunks.append(int(valid[i]))
+
     def decode_step(self, rids, chunk: int):
         if self.kv_admission == "incremental" and rids:
             # transactional worst-case reservation BEFORE any state mutates
             _reserve_step(self.kv, self._states, rids, chunk)
         infos = {}
         ctxs, eff_chunks = [], []
-        for rid in rids:
-            st = self._states[rid]
-            if isinstance(st, ARState):
-                st.commit(int(self._rng.integers(5, 1000)))
-                infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
+        states = [self._states[rid] for rid in rids]
+        if states and not isinstance(states[0], ARState) \
+                and states[0].mode == "slide":
+            self._step_slide_batched(rids, states, chunk, infos, ctxs,
+                                     eff_chunks)
+        else:
+            # AR and block-pinned (hybrid) stay on the scalar path: AR is a
+            # single RNG draw per rid, pinned windows have per-step widths
+            for rid, st in zip(rids, states):
+                if isinstance(st, ARState):
+                    st.commit(int(self._rng.integers(5, 1000)))
+                    infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
+                    ctxs.append(st.prompt_len + st.frozen)
+                    eff_chunks.append(1)
+                    continue
+                toks, start, valid, cai = st.window(chunk)
+                if valid == 0:
+                    infos[rid] = StepInfo(0, np.zeros(len(toks), bool), 0,
+                                          st.done)
+                    ctxs.append(st.prompt_len + st.frozen)
+                    continue
+                first_unc = next((i for i in range(valid) if not cai[i]),
+                                 valid)
+                depths = np.maximum(np.arange(len(toks)) - first_unc, 0)
+                conf = self.sim.confidences(depths)
+                tok = self._rng.integers(5, 1000, size=len(toks))
+                commit_mask, n_adv = st.apply_step(conf, tok, valid, cai)
+                st.advance(n_adv)
+                infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask,
+                                      valid, st.done)
                 ctxs.append(st.prompt_len + st.frozen)
-                eff_chunks.append(1)
-                continue
-            if st.mode == "slide":
-                st.obs = (self.obs_policy == "always" or
-                          (self.obs_policy == "large_chunk"
-                           and chunk >= self.cfg.block_size))
-            toks, start, valid, cai = st.window(chunk)
-            if valid == 0:
-                infos[rid] = StepInfo(0, np.zeros(len(toks), bool), 0, st.done)
-                ctxs.append(st.prompt_len + st.frozen)
-                continue
-            first_unc = next((i for i in range(valid) if not cai[i]), valid)
-            depths = np.maximum(np.arange(len(toks)) - first_unc, 0)
-            conf = self.sim.confidences(depths)
-            tok = self._rng.integers(5, 1000, size=len(toks))
-            commit_mask, n_adv = st.apply_step(conf, tok, valid, cai)
-            st.advance(n_adv)
-            infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask, valid,
-                                  st.done)
-            ctxs.append(st.prompt_len + st.frozen)
-            eff_chunks.append(valid)
+                eff_chunks.append(valid)
         if self.kv_admission == "incremental":
             _trim_step(self.kv, self._states, rids)
         b = max(1, len(rids))
@@ -322,7 +362,8 @@ class ModelBackend:
                  decode_mode: str = "elastic", obs: bool = False,
                  cache_dtype=np.float32, paged: bool | None = None,
                  kv_pages: int | None = None, page_size: int | None = None,
-                 attn_impl: str | None = None, interpret: bool | None = None):
+                 attn_impl: str | None = None, interpret: bool | None = None,
+                 fused: bool = True):
         import functools
 
         import jax
@@ -340,6 +381,10 @@ class ModelBackend:
         self.grows_kv = self.paged
         self._states: dict[int, object] = {}
         self._req: dict[int, Request] = {}
+        # hot-path telemetry (decode_step_bench / acceptance tests)
+        self.decode_dispatches = 0       # jit dispatches issued by decode
+        self.prefill_dispatches = 0      # jit dispatches issued by prefill
+        self.host_transfer_bytes = 0     # device→host bytes pulled by decode
 
         if self.paged:
             model._check_paged()
@@ -354,10 +399,24 @@ class ModelBackend:
             self._pending_prefill: list[Request] = []
             impl = attn_impl if attn_impl is not None \
                 else self.cfg.paged_attn_impl
-            self._prefill_paged = jax.jit(model.prefill_paged)
+            self.fused = fused
+            # DONATION CONTRACT: every jit below that takes the page-pool
+            # cache donates it (the pool aliases in place; XLA updates the
+            # pages without materializing a second pool copy per step).
+            # Callers must treat handles returned by ``_pages_cache`` as
+            # consumed once passed to a donating call — ``_store_pages``
+            # immediately replaces them with the step's outputs, and any
+            # stale outside reference raises on use ("Array has been
+            # deleted") rather than reading freed memory.
+            self._prefill_paged = jax.jit(model.prefill_paged,
+                                          donate_argnums=(1,))
             self._chunk_paged = jax.jit(functools.partial(
                 model.chunk_forward_paged, impl=impl, interpret=interpret))
-            self._freeze_paged = jax.jit(model.freeze_paged)
+            self._freeze_paged = jax.jit(model.freeze_paged,
+                                         donate_argnums=(0,))
+            self._decode_paged = jax.jit(functools.partial(
+                model.decode_step_paged, impl=impl, interpret=interpret),
+                donate_argnums=(1,))
         else:
             if supports:
                 raise ValueError(
@@ -544,21 +603,9 @@ class ModelBackend:
         self.kv.k_pages = pages["k_pages"]
         self.kv.v_pages = pages["v_pages"]
 
-    def _batch_arrays(self, rids):
-        """Bucketed (tables, ctx) host arrays for a decode batch; padded
-        rows get table 0 / ctx 0 — never read thanks to ctx_lens masking."""
-        B = len(rids)
-        Bp = self._bucket(B)
-        tables = np.zeros((Bp, self._table_width), np.int32)
-        tables[:B] = self.kv.batch_tables(rids, self._table_width)
-        ctx = np.zeros(Bp, np.int64)
-        for i, rid in enumerate(rids):
-            st = self._states[rid]
-            ctx[i] = st.prompt_len + st.frozen
-        return Bp, tables, ctx
-
     def _flush_prefills(self):
-        """Run every deferred admission as ONE batched prefill forward."""
+        """Run every deferred admission as ONE batched prefill forward
+        (page pool donated — the prefill scatters into the pool in place)."""
         if not self._pending_prefill:
             return
         jnp = self.jnp
@@ -578,6 +625,7 @@ class ModelBackend:
             self.params, self._pages_cache(), jnp.asarray(toks),
             jnp.asarray(lens, jnp.int32), jnp.asarray(tables))
         self._store_pages(pages)
+        self.prefill_dispatches += 1
         last_logits = np.asarray(last_logits)
         for i, r in enumerate(reqs):
             st = self._states[r.rid]
@@ -585,74 +633,95 @@ class ModelBackend:
                 _, tok = softmax_confidence(last_logits[i])
                 st.commit(int(tok))
 
-    def _step_ar_paged(self, ar_rids, infos):
-        """AR decode over the page pool: c=1 window at the last committed
-        token, prefix = everything before it (ctx = len-1)."""
+    def _dispatch_window(self, rids, win, start, valid, n_adv):
+        """Run one paged decode dispatch for an assembled window batch.
+
+        Shared by the AR and diffusion paths (the window-assembly halves
+        differ; the device step does not).  ``start`` doubles as
+        ``ctx_lens``: a slide window starts exactly at the committed prefix
+        length, and an AR window sits at the last committed token with the
+        prefix ending just before it.  Pads every host array to the jit
+        bucket (padded rows: table 0 / ctx 0 / valid 0 — masked out on
+        device) and returns host (conf [B, c], tok [B, c]).
+
+        Fused mode (default): ONE jitted dispatch
+        (``model.decode_step_paged``) runs chunk-forward + freeze +
+        on-device sampling with the page pool donated, and only ``2·B·c``
+        scalars come back.  Pre-fusion mode replays the historical pair —
+        chunk dispatch, full ``[B, c, V]`` logits to host, fp64 sampling,
+        freeze dispatch — as the benchmark baseline.
+        """
         jnp = self.jnp
-        Bp, tables, ctx = self._batch_arrays(ar_rids)
-        win = np.full((Bp, 1), self.cfg.mask_token_id, np.int64)
-        start = np.zeros(Bp, np.int64)
-        valid = np.zeros(Bp, np.int64)
-        n_adv = np.zeros(Bp, np.int64)
-        for i, rid in enumerate(ar_rids):
-            st = self._states[rid]
-            win[i, 0] = st.committed[st.frozen - 1]
-            start[i] = st.prompt_len + st.frozen - 1
-            ctx[i] = start[i]
-            valid[i] = 1
-            n_adv[i] = 1
+        B, c = win.shape
+        Bp = self._bucket(B)
+        tables = np.zeros((Bp, self._table_width), np.int32)
+        tables[:B] = self.kv.batch_tables(rids, self._table_width)
+        w = np.full((Bp, c), self.cfg.mask_token_id, np.int64)
+        w[:B] = win
+        s = np.zeros(Bp, np.int64)
+        s[:B] = start
+        v = np.zeros(Bp, np.int64)
+        v[:B] = valid
+        a = np.zeros(Bp, np.int64)
+        a[:B] = n_adv
         cache = self._pages_cache()
-        logits, win_kv = self._chunk_paged(
-            self.params, cache, jnp.asarray(win, jnp.int32),
-            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
-            jnp.asarray(tables), jnp.asarray(ctx, jnp.int32))
-        if win_kv is not None:
+        args = (self.params, cache, jnp.asarray(w, jnp.int32),
+                jnp.asarray(s, jnp.int32), jnp.asarray(v, jnp.int32),
+                jnp.asarray(tables), jnp.asarray(s, jnp.int32))
+        if self.fused:
+            conf, tok, pages = self._decode_paged(
+                *args, jnp.asarray(a, jnp.int32))
+            self._store_pages(pages)
+            self.decode_dispatches += 1
+            conf = np.asarray(conf)
+            tok = np.asarray(tok)
+            self.host_transfer_bytes += conf.nbytes + tok.nbytes
+            return conf[:B], tok[:B].astype(np.int64)
+        logits, win_kv = self._chunk_paged(*args)
+        self.decode_dispatches += 1
+        logits = np.asarray(logits)
+        self.host_transfer_bytes += logits.nbytes
+        if win_kv is not None and a[:B].any():
             self._store_pages(self._freeze_paged(
                 cache, win_kv, jnp.asarray(tables),
-                jnp.asarray(start, jnp.int32), jnp.asarray(n_adv, jnp.int32)))
-        logits = np.asarray(logits)
-        for i, rid in enumerate(ar_rids):
-            st = self._states[rid]
-            _, tok = softmax_confidence(logits[i, 0])
-            st.commit(int(tok))
+                jnp.asarray(s, jnp.int32), jnp.asarray(a, jnp.int32)))
+            self.decode_dispatches += 1
+        conf, tok = softmax_confidence(logits[:B])
+        return conf, tok
+
+    def _step_ar_paged(self, ar_rids, infos):
+        """AR decode over the page pool: c=1 window at the last committed
+        token, prefix = everything before it; the input token's KV freezes
+        into the pool every step (n_adv = 1)."""
+        states = [self._states[rid] for rid in ar_rids]
+        B = len(states)
+        win = np.empty((B, 1), np.int64)
+        start = np.empty(B, np.int64)
+        for i, st in enumerate(states):
+            win[i, 0] = st.committed[st.frozen - 1]
+            start[i] = st.prompt_len + st.frozen - 1
+        ones = np.ones(B, np.int64)
+        _, tok = self._dispatch_window(ar_rids, win, start, ones, ones)
+        for i, (rid, st) in enumerate(zip(ar_rids, states)):
+            st.commit(int(tok[i, 0]))
             infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
 
     def _step_diffusion_paged(self, diff_rids, chunk, infos):
-        jnp = self.jnp
-        c = chunk
-        Bp, tables, ctx = self._batch_arrays(diff_rids)
-        win = np.full((Bp, c), self.cfg.mask_token_id, np.int64)
-        start = np.zeros(Bp, np.int64)
-        valid = np.zeros(Bp, np.int64)
-        meta = {}
-        for i, rid in enumerate(diff_rids):
-            st = self._states[rid]
-            toks, s, v, cai = st.window(c)
-            win[i, :len(toks)] = toks
-            start[i] = s
-            valid[i] = v
-            meta[rid] = (cai, v, i)
-        cache = self._pages_cache()
-        logits, win_kv = self._chunk_paged(
-            self.params, cache, jnp.asarray(win, jnp.int32),
-            jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
-            jnp.asarray(tables), jnp.asarray(ctx, jnp.int32))
-        logits = np.asarray(logits)
-        n_adv_arr = np.zeros(Bp, np.int64)
-        for rid in diff_rids:
-            st = self._states[rid]
-            cai, v, i = meta[rid]
-            conf, tok = softmax_confidence(logits[i, :c])
-            commit_mask, n_adv = st.apply_step(conf, tok, v, cai)
-            n_adv_arr[i] = n_adv
-            st.advance(n_adv)
-            infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask, v,
-                                  st.done)
-        if win_kv is not None and n_adv_arr.any():
-            self._store_pages(self._freeze_paged(
-                cache, win_kv, jnp.asarray(tables),
-                jnp.asarray(start, jnp.int32),
-                jnp.asarray(n_adv_arr, jnp.int32)))
+        states = [self._states[rid] for rid in diff_rids]
+        win, start, valid, cai = batch_windows(states, chunk)
+        # the freeze run is known before the step (leading committed-at-
+        # input positions) — this is what makes the fused freeze possible
+        n_adv = freeze_run(valid, cai)
+        conf, tok = self._dispatch_window(diff_rids, win, start, valid,
+                                          n_adv)
+        commit, n_adv_post = batch_apply_step(states, conf, tok, valid, cai)
+        # invariant: commits this step can never clamp the pre-step run
+        # (the fused dispatch already froze n_adv entries into the pool)
+        assert (n_adv_post == n_adv).all(), (n_adv_post, n_adv)
+        for i, (rid, st) in enumerate(zip(diff_rids, states)):
+            st.advance(int(n_adv_post[i]))
+            infos[rid] = StepInfo(int(commit[i].sum()), commit[i],
+                                  int(valid[i]), st.done)
 
     def _split_ar(self, rids, infos):
         """Partition rids into (live AR, diffusion); AR requests already

@@ -21,6 +21,7 @@ preserves the original single-replica ``run()`` API bit-for-bit.
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -91,6 +92,12 @@ class EngineCore:
         # with priorities it lets a preemptor admit ahead of the victim it
         # just evicted (whose arrival_time is necessarily older).
         self._pending: list[Request] = []
+        # maintained min over pending arrival times: lazy-deletion heap
+        # (push on submit, decref on admit-pop) so next_event_time() — which
+        # the cluster loop calls for EVERY replica at EVERY event — is O(1)
+        # amortized instead of an O(pending) scan per tick
+        self._arrival_heap: list[float] = []
+        self._arrival_live: dict[float, int] = {}
         self._active: list[Request] = []
         self._metrics: dict[int, RequestMetrics] = {}
         self._chunk_hist: list = []
@@ -124,10 +131,26 @@ class EngineCore:
     def pending_requests(self) -> list[Request]:
         return list(self._pending)
 
+    def _arrival_track(self, t: float):
+        heapq.heappush(self._arrival_heap, t)
+        self._arrival_live[t] = self._arrival_live.get(t, 0) + 1
+
+    def _arrival_untrack(self, t: float):
+        n = self._arrival_live.get(t, 0) - 1
+        if n > 0:
+            self._arrival_live[t] = n
+        else:
+            self._arrival_live.pop(t, None)
+
     def _earliest_arrival(self) -> float:
         # _pending is priority-ordered, so the earliest arrival may sit
-        # anywhere in it; with uniform priorities it is _pending[-1].
-        return min(r.arrival_time for r in self._pending)
+        # anywhere in it; the lazy-deletion heap keeps the min maintained
+        # (entries whose live-count dropped to zero are popped on read)
+        # instead of re-scanning all of _pending on every tick.
+        heap = self._arrival_heap
+        while heap and self._arrival_live.get(heap[0], 0) == 0:
+            heapq.heappop(heap)
+        return heap[0]
 
     def next_event_time(self) -> float:
         """Virtual time of this core's next actionable event (``inf`` when
@@ -156,6 +179,7 @@ class EngineCore:
             else:
                 hi = mid
         p.insert(lo, req)
+        self._arrival_track(req.arrival_time)
 
     def submit_all(self, requests):
         """Bulk submit; on an empty queue this reproduces the historical
@@ -164,6 +188,8 @@ class EngineCore:
         if not self._pending:
             self._pending = list(reversed(
                 sorted(requests, key=self._queue_key)))
+            for r in self._pending:
+                self._arrival_track(r.arrival_time)
         else:
             for r in requests:
                 self.submit(r)
@@ -217,6 +243,7 @@ class EngineCore:
                     or not self._growth_headroom_ok(self._pending[i]):
                 break
             req = self._pending.pop(i)
+            self._arrival_untrack(req.arrival_time)
             m = self._metrics.get(req.rid)
             if m is None:
                 m = RequestMetrics(req.rid, req.arrival_time)

@@ -36,12 +36,22 @@ class PagedKVAllocator:
     _free: list = field(init=False)
     _tables: dict = field(default_factory=dict, init=False)   # rid → [page,...]
     _lens: dict = field(default_factory=dict, init=False)     # rid → tokens
+    # incrementally maintained padded block-table rows (see batch_tables):
+    # a row goes dirty only when pages are actually appended/popped, so the
+    # steady-state decode tick reuses cached rows instead of rebuilding
+    _rows: dict = field(default_factory=dict, init=False)     # rid → int32 row
+    _dirty: set = field(default_factory=set, init=False)
+    _batch_memo: tuple | None = field(default=None, init=False)
     # device-side page pool (None until init_storage; sim backends never set)
     k_pages: object = field(default=None, init=False)
     v_pages: object = field(default=None, init=False)
 
     def __post_init__(self):
         self._free = list(range(self.n_pages - 1, -1, -1))
+
+    def _mark_dirty(self, rid: int):
+        self._dirty.add(rid)
+        self._batch_memo = None
 
     # ------------------------------------------------------------------
     @property
@@ -62,6 +72,7 @@ class PagedKVAllocator:
             raise OutOfPages(f"need {need} pages, have {len(self._free)}")
         self._tables[rid] = [self._free.pop() for _ in range(need)]
         self._lens[rid] = n_tokens
+        self._mark_dirty(rid)
         return list(self._tables[rid])
 
     def extend(self, rid: int, new_len: int):
@@ -70,8 +81,10 @@ class PagedKVAllocator:
         need = self.pages_for(new_len) - len(table)
         if need > len(self._free):
             raise OutOfPages(f"extend needs {need}, have {len(self._free)}")
-        for _ in range(max(need, 0)):
-            table.append(self._free.pop())
+        if need > 0:
+            for _ in range(need):
+                table.append(self._free.pop())
+            self._mark_dirty(rid)
         self._lens[rid] = new_len
         return list(table)
 
@@ -83,14 +96,19 @@ class PagedKVAllocator:
         length) is safe to call unconditionally."""
         table = self._tables[rid]
         keep = self.pages_for(new_len)
-        while len(table) > keep:
-            self._free.append(table.pop())
+        if len(table) > keep:
+            while len(table) > keep:
+                self._free.append(table.pop())
+            self._mark_dirty(rid)
         self._lens[rid] = min(self._lens[rid], max(new_len, 0))
         return list(table)
 
     def free(self, rid: int):
         self._free.extend(reversed(self._tables.pop(rid)))
         self._lens.pop(rid)
+        self._rows.pop(rid, None)
+        self._dirty.discard(rid)
+        self._batch_memo = None
 
     def block_table(self, rid: int) -> list[int]:
         return list(self._tables[rid])
@@ -136,12 +154,34 @@ class PagedKVAllocator:
         DMAs padded slots but masks their contribution via ``ctx_lens``,
         so entries must stay in-bounds).  ``width`` defaults to the longest
         table in the batch.
+
+        Incrementally maintained: each rid's padded row is cached and only
+        rebuilt when its table actually changed (dirty-row tracking on
+        allocate/extend/trim), and the stacked batch itself is memoized on
+        the (rids, width) key — the steady-state decode tick, where tables
+        grow only every ``page_size`` tokens, returns the previous array
+        without touching any table.  Callers must treat the result as
+        read-only (the serving backends copy it into their padded jit
+        buffers).
         """
-        tables = [self._tables[rid] for rid in rids]
-        width = width if width is not None else max(
-            (len(t) for t in tables), default=1)
-        out = np.zeros((len(rids), max(width, 1)), np.int32)
-        for i, t in enumerate(tables):
-            assert len(t) <= out.shape[1], (len(t), out.shape)
-            out[i, :len(t)] = t
+        if width is None:
+            width = max((len(self._tables[rid]) for rid in rids), default=1)
+        W = max(width, 1)
+        key = (tuple(rids), W)
+        if self._batch_memo is not None and self._batch_memo[0] == key:
+            return self._batch_memo[1]
+        rows = []
+        for rid in rids:
+            row = self._rows.get(rid)
+            if rid in self._dirty or row is None or row.shape[0] != W:
+                t = self._tables[rid]
+                assert len(t) <= W, (len(t), W)
+                row = np.zeros(W, np.int32)
+                row[:len(t)] = t
+                self._rows[rid] = row
+                self._dirty.discard(rid)
+            rows.append(row)
+        out = np.stack(rows) if rows else np.zeros((0, W), np.int32)
+        out.setflags(write=False)
+        self._batch_memo = (key, out)
         return out

@@ -202,3 +202,56 @@ def test_model_backend_rwkv_ar():
     rep = eng.run(_tiny_requests(cfg, 2, seed=6, prompt=8, out=8))
     assert all(m.n_tokens == 8 for m in rep.metrics)
     assert rep.token_utilization == 1.0
+
+
+# ---------------------------------------------------------------------------
+# maintained earliest-arrival min (replaces the O(pending) scan per tick)
+# ---------------------------------------------------------------------------
+
+def test_earliest_arrival_maintained_min_matches_scan():
+    """The lazy-deletion heap behind ``_earliest_arrival`` must track the
+    true min over pending arrivals through submits, priority-ordered
+    admits, preempt-requeues, and bulk submission."""
+    from repro.serving import EngineCore, Request
+
+    be = SimBackend(CFG, A100_80G,
+                    tokens_per_step=PROF.tokens_per_step_bd32, seed=0)
+    core = EngineCore(be, FixedScheduler(8), max_batch=2)
+    rng = np.random.default_rng(0)
+
+    def check():
+        if core.pending_requests():
+            assert core._earliest_arrival() == min(
+                r.arrival_time for r in core.pending_requests())
+
+    reqs = [Request(rid=i, arrival_time=float(rng.integers(0, 7)),
+                    prompt_len=8, max_new_tokens=8,
+                    priority=int(rng.integers(0, 3)))
+            for i in range(12)]
+    core.submit_all(reqs[:6])             # bulk path (empty-queue reset)
+    check()
+    for r in reqs[6:]:                    # binary-insert path
+        core.submit(r)
+        check()
+    for _ in range(200):                  # admits pop mid-list entries
+        if not core.tick():
+            break
+        check()
+    assert not core.pending_requests()
+
+    # preempt requeues through submit(): the min must re-track the victim
+    core2 = EngineCore(be2 := SimBackend(
+        CFG, A100_80G, tokens_per_step=PROF.tokens_per_step_bd32, seed=1),
+        FixedScheduler(8), max_batch=4)
+    vic = [Request(rid=100 + i, arrival_time=0.5 * i, prompt_len=8,
+                   max_new_tokens=16) for i in range(3)]
+    core2.submit_all(vic)
+    for _ in range(3):
+        core2.tick()
+    active = core2.active_requests()
+    assert active
+    core2.preempt(active[0].rid)
+    assert core2._earliest_arrival() == min(
+        r.arrival_time for r in core2.pending_requests())
+    core2.drain()
+    assert len(core2.report().metrics) == 3

@@ -114,6 +114,67 @@ def test_batch_tables_padded_layout():
     assert kv.batch_tables([0, 1]).shape == (2, 3)
 
 
+def test_batch_tables_incremental_maintenance():
+    """Dirty-row tracking: batch_tables must stay exact through arbitrary
+    allocate/extend/trim/free interleavings, reuse the memoized batch when
+    nothing changed, and rebuild only rows whose tables actually changed."""
+    import numpy as np
+    kv = PagedKVAllocator(n_pages=32, page_size=16)
+
+    def naive(rids, width):
+        out = np.zeros((len(rids), width), np.int32)
+        for i, r in enumerate(rids):
+            t = kv.block_table(r)
+            out[i, :len(t)] = t
+        return out
+
+    kv.allocate(0, 40)
+    kv.allocate(1, 10)
+    kv.allocate(2, 70)
+    rids, W = [0, 1, 2], 8
+    a = kv.batch_tables(rids, W)
+    assert (a == naive(rids, W)).all()
+    # steady state (no table mutation): the SAME memoized array comes back
+    assert kv.batch_tables(rids, W) is a
+    # within-page growth does not dirty the row
+    kv.extend(0, 48)                        # 3 pages → still 3
+    assert kv.batch_tables(rids, W) is a
+    # crossing a page boundary rebuilds exactly
+    kv.extend(1, 17)
+    b = kv.batch_tables(rids, W)
+    assert b is not a and (b == naive(rids, W)).all()
+    # trim that frees a page dirties; no-op trim does not
+    kv.trim(2, 70)
+    assert kv.batch_tables(rids, W) is b
+    kv.trim(2, 16)
+    c = kv.batch_tables(rids, W)
+    assert c is not b and (c == naive(rids, W)).all()
+    # membership / width changes miss the memo but stay exact
+    assert (kv.batch_tables([2, 0], 6) == naive([2, 0], 6)).all()
+    assert (kv.batch_tables(rids, W) == naive(rids, W)).all()
+    # free + re-allocate recycles pages with fresh rows
+    kv.free(1)
+    kv.allocate(3, 33)
+    assert (kv.batch_tables([0, 2, 3], W) == naive([0, 2, 3], W)).all()
+    # the step protocol's extend→trim roundtrip leaves the memo reusable
+    d = kv.batch_tables([0, 2, 3], W)
+    kv.extend(0, 64)
+    kv.trim(0, 48)
+    e = kv.batch_tables([0, 2, 3], W)
+    assert (e == naive([0, 2, 3], W)).all() and (e == d).all()
+
+
+def test_batch_tables_result_is_read_only():
+    import numpy as np
+    import pytest as _pytest
+    kv = PagedKVAllocator(n_pages=8, page_size=16)
+    kv.allocate(0, 20)
+    out = kv.batch_tables([0], 4)
+    with _pytest.raises(ValueError):
+        out[0, 0] = 99
+    assert (np.asarray(out) == kv.batch_tables([0], 4)).all()
+
+
 def test_init_storage_owns_device_pages():
     jnp = pytest.importorskip("jax.numpy")
     kv = PagedKVAllocator(n_pages=8, page_size=4)

@@ -8,8 +8,11 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings        # noqa: E402
 from hypothesis import strategies as st       # noqa: E402
 
-from repro.core.chunked import ChunkedDecodeState
-from repro.core.diffusion import commit_decisions
+import copy
+
+from repro.core.chunked import (ChunkedDecodeState, batch_apply_step,
+                                batch_windows, freeze_run)
+from repro.core.diffusion import batch_commit_decisions, commit_decisions
 from repro.core.latency_model import PiecewiseAffineLatencyModel
 from repro.core.tu_model import TokenUtilEstimator
 from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
@@ -75,6 +78,86 @@ def test_chunked_state_machine_terminates_and_is_consistent(
     assert all(t >= 0 for t in st_.output_tokens)
     # computed-token accounting is an upper bound of commits
     assert st_.computed_tokens >= st_.gen_limit
+
+
+# ---------------------------------------------------------------------------
+# batched host commit logic ≡ scalar reference loop
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0, 1), min_size=1, max_size=64),
+       st.lists(st.booleans(), min_size=1, max_size=64),
+       st.floats(0.1, 0.99))
+@settings(max_examples=200, deadline=None)
+def test_batch_commit_decisions_matches_scalar(confs, uncs, thr):
+    n = min(len(confs), len(uncs))
+    conf = np.array(confs[:n])
+    unc = np.array(uncs[:n])
+    ref = commit_decisions(conf, unc, thr)
+    got = batch_commit_decisions(conf[None], unc[None], np.array([thr]))
+    np.testing.assert_array_equal(got[0], ref)
+
+
+@given(st.lists(st.tuples(st.integers(0, 12),      # prompt
+                          st.integers(1, 24),      # gen
+                          st.booleans(),           # obs
+                          st.booleans(),           # has eos
+                          st.integers(0, 5)),      # warmup steps
+                min_size=1, max_size=8),
+       st.integers(1, 16),                         # chunk
+       st.randoms(use_true_random=False))
+@settings(max_examples=60, deadline=None)
+def test_batch_apply_step_matches_scalar_reference(specs, chunk, rnd):
+    """The batched window build + apply must be indistinguishable from the
+    per-request scalar loop: identical commit masks and n_advance, identical
+    committed tokens, identical EOS-clamped gen_limit, identical step /
+    computed-token accounting — on arbitrary mid-decode configurations."""
+    rng = np.random.default_rng(rnd.randrange(1 << 30))
+    eos = 7
+    states = []
+    for prompt, gen, obs, has_eos, warm in specs:
+        s = ChunkedDecodeState(prompt_len=prompt, max_new_tokens=gen,
+                               block_size=8, threshold=0.6, mask_token=3,
+                               eos_token=eos if has_eos else None, obs=obs)
+        for _ in range(warm):
+            toks, _, valid, cai = s.window(int(rng.integers(1, 9)))
+            if valid == 0:
+                break
+            _, n_adv = s.apply_step(rng.random(len(toks)),
+                                    rng.integers(5, 12, len(toks)),
+                                    valid, cai)
+            s.advance(n_adv)
+        states.append(s)
+
+    ref_states = copy.deepcopy(states)
+    win, start, valid, cai = batch_windows(states, chunk)
+    # scalar windows agree first
+    for i, s in enumerate(ref_states):
+        t, st_, v, c = s.window(chunk)
+        np.testing.assert_array_equal(win[i], t)
+        assert (start[i], valid[i]) == (st_, v)
+        np.testing.assert_array_equal(cai[i], c)
+
+    conf = rng.random((len(states), chunk))
+    tok = rng.integers(5, 12, (len(states), chunk))  # low range → EOS hits
+    commit_b, n_adv_b = batch_apply_step(states, conf, tok, valid, cai)
+    assert (n_adv_b == np.minimum(freeze_run(valid, cai),
+                                  [s.gen_limit - s.frozen if valid[i] else 0
+                                   for i, s in enumerate(states)])).all()
+    for i, s in enumerate(ref_states):
+        if valid[i] == 0:
+            assert not commit_b[i].any() and n_adv_b[i] == 0
+            continue
+        commit_s, n_adv_s = s.apply_step(conf[i], tok[i], int(valid[i]),
+                                         cai[i])
+        np.testing.assert_array_equal(commit_b[i], commit_s)
+        assert n_adv_b[i] == n_adv_s
+        b = states[i]
+        np.testing.assert_array_equal(b.committed, s.committed)
+        assert b.gen_limit == s.gen_limit
+        assert b.steps == s.steps
+        assert b.computed_tokens == s.computed_tokens
+        assert b.committed_history == s.committed_history
 
 
 # ---------------------------------------------------------------------------
