@@ -87,9 +87,13 @@ def bench_case(model, params, mode: str, B: int, c: int, fused: bool,
     """Step one fixed batch to completion; return (stats, outputs)."""
     from repro.serving import ModelBackend
     cfg = model.cfg
+    # wave prefill: the whole admission clears inside the warmup steps, so
+    # the measured steady state is pure decode (chunked prefill would mix
+    # budget-bounded prefill dispatches into the first measured ticks)
     be = ModelBackend(model, params, max_len=PROMPT + GEN + cfg.block_size,
                       kv_pages=4 * B * ((PROMPT + GEN) // 16 + 2),
-                      decode_mode=mode, attn_impl=attn_impl, fused=fused)
+                      decode_mode=mode, attn_impl=attn_impl, fused=fused,
+                      prefill_mode="wave")
     for r in _requests(cfg, B):
         be.admit(r)
     rids = list(range(B))

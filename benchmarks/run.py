@@ -509,6 +509,26 @@ def kv_pressure(quick=False):
          f"{s['cap_gain_elastic_pages']} pages")
 
 
+def prefill_interleave(quick=False):
+    """Chunked prefill vs monolithic admission-wave prefill on a bursty
+    long-prompt trace → BENCH_prefill_interleave.json
+    (see benchmarks/prefill_interleave_bench)."""
+    from benchmarks.prefill_interleave_bench import run_bench
+    payload = run_bench(quick=quick, verbose=False)
+    s = payload["summary"]
+    emit("prefill_interleave.ttft_p90_gain", f"{s['ttft_p90_gain']:.2f}x",
+         "chunked vs wave, bursty longbench trace (elastic rows)")
+    emit("prefill_interleave.max_stall_gain", f"{s['max_stall_gain']:.1f}x",
+         "largest inter-commit gap of any in-flight decode")
+    emit("prefill_interleave.tokens_match",
+         str(s["sim_tokens_match_fixed_chunk"]
+             and s["model_tokens_match"]).lower(),
+         "wave and chunked commit bit-identical tokens (fixed chunk)")
+    emit("prefill_interleave.throughput_ratio",
+         f"{s['throughput_ratio']:.2f}",
+         "chunked/wave goodput — the bounded per-tick prefill tax")
+
+
 def decode_step(quick=False):
     """Fused donated decode step vs pre-fusion → BENCH_decode_step.json
     (see benchmarks/decode_step_bench)."""
@@ -543,6 +563,7 @@ ALL = {
     "paged_attn": paged_attn,
     "kv_pressure": kv_pressure,
     "decode_step": decode_step,
+    "prefill_interleave": prefill_interleave,
 }
 
 

@@ -31,12 +31,17 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                       kv_pages: int = 1 << 16, max_batch: int = 256,
                       seed: int = 0, kv_watermark: float = 0.05,
                       preemption: bool = False,
-                      kv_admission: str = "incremental") -> ClusterEngine:
+                      kv_admission: str = "incremental",
+                      prefill_mode: str = "wave",
+                      prefill_token_budget: int | None = None
+                      ) -> ClusterEngine:
     """N independent SimBackend+scheduler replicas (per-replica RNG seeds,
     per-replica TU estimator state) under one ClusterEngine.  ``router``
     may be a name (see :data:`repro.cluster.router.ROUTERS`) or a router
     instance; ``kv_admission`` picks incremental page growth (default) or
-    the legacy worst-case ``reserve`` baseline."""
+    the legacy worst-case ``reserve`` baseline; ``prefill_mode="chunked"``
+    interleaves budget-bounded prefill chunks with replica decode ticks
+    instead of charging each admission's whole prompt synchronously."""
     if isinstance(router, str):
         router = make_router(router)
     replicas = []
@@ -45,7 +50,9 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                         tokens_per_step=profile.tokens_per_step_bd32,
                         decode_mode="ar" if mode == "ar" else "elastic",
                         kv_pool_pages=kv_pages, seed=seed + 1000 * i,
-                        kv_admission=kv_admission)
+                        kv_admission=kv_admission,
+                        prefill_mode=prefill_mode,
+                        prefill_token_budget=prefill_token_budget)
         sch = make_replica_scheduler(be, profile, mode)
         replicas.append(EngineCore(be, sch, max_batch=max_batch))
     return ClusterEngine(replicas, router,
@@ -60,7 +67,10 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
                         kv_pages: int | None = None,
                         page_size: int | None = None, max_batch: int = 64,
                         kv_watermark: float = 0.05,
-                        preemption: bool = False) -> ClusterEngine:
+                        preemption: bool = False,
+                        prefill_mode: str = "chunked",
+                        prefill_token_budget: int | None = None
+                        ) -> ClusterEngine:
     """N real-model replicas (shared params, per-replica KV pool) under one
     ClusterEngine.  Attention-only families serve paged, so every replica
     admits by allocator pages (prompt-only, incremental growth) and
@@ -72,7 +82,9 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
     for _ in range(n_replicas):
         be = ModelBackend(model, params, n_slots=n_slots, max_len=max_len,
                           decode_mode="ar" if mode == "ar" else "elastic",
-                          kv_pages=kv_pages, page_size=page_size)
+                          kv_pages=kv_pages, page_size=page_size,
+                          prefill_mode=prefill_mode,
+                          prefill_token_budget=prefill_token_budget)
         sch = scheduler_for_mode(
             mode, AnalyticDeviceModel(model.cfg, CPU_HOST),
             prior_tokens_per_step=profile.tokens_per_step_bd32,

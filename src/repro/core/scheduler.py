@@ -52,10 +52,16 @@ class ElasticScheduler:
         self._current = max(self.candidates)
 
     # ------------------------------------------------------------------
-    def score(self, c: int, b: int) -> float:
-        """Estimated committed tokens per second at chunk size c, batch b."""
+    def score(self, c: int, b: int, prefill_tokens: int = 0) -> float:
+        """Estimated committed tokens per second at chunk size c, batch b.
+
+        ``prefill_tokens`` is the prompt-token load the same tick carries
+        (chunked prefill interleaved with the decode dispatch): it rides
+        the same ``b·c`` effective-workload axis of the latency model, so
+        chunk-size control and prefill share one saturation signal — near
+        saturation, queued prefill pushes the pick toward smaller chunks."""
         n = self.tu_estimator.estimate(c)
-        t = self.latency_model.predict(b, c)
+        t = self.latency_model.predict_bc(b * c + prefill_tokens)
         return n * b / t
 
     def memory_cap(self, kv_util: float | None) -> int:
@@ -69,13 +75,16 @@ class ElasticScheduler:
         steps_down = int(round(frac * (len(cands) - 1)))
         return cands[len(cands) - 1 - steps_down]
 
-    def select(self, b: int, kv_util: float | None = None) -> int:
-        """Pick the chunk size for the next iteration given live batch b
-        and (optionally) the KV allocator's utilization in [0, 1]."""
+    def select(self, b: int, kv_util: float | None = None,
+               prefill_tokens: int = 0) -> int:
+        """Pick the chunk size for the next iteration given live batch b,
+        (optionally) the KV allocator's utilization in [0, 1], and the
+        prompt tokens of chunked-prefill work sharing the tick."""
         if b <= 0:
             return max(self.candidates)
         cap = self.memory_cap(kv_util)
-        scores = {c: self.score(c, b) for c in self.candidates if c <= cap}
+        scores = {c: self.score(c, b, prefill_tokens)
+                  for c in self.candidates if c <= cap}
         best = max(scores, key=scores.get)
         cur = self._current
         if cur in scores and scores[best] <= (1 + self.hysteresis) * scores[cur]:
@@ -120,7 +129,8 @@ class FixedScheduler:
     chunk: int
     history: list = field(default_factory=list, init=False)
 
-    def select(self, b: int, kv_util: float | None = None) -> int:
+    def select(self, b: int, kv_util: float | None = None,
+               prefill_tokens: int = 0) -> int:
         self.history.append((b, self.chunk))
         return self.chunk
 

@@ -49,6 +49,15 @@ def main():
                     help="sim backend: incremental page growth with "
                          "preemption-on-OutOfPages (default) vs legacy "
                          "worst-case reservation at admit")
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "wave"],
+                    help="chunked: interleave budget-bounded page-aligned "
+                         "prefill chunks with decode ticks (default); "
+                         "wave: the monolithic whole-admission-wave "
+                         "prefill baseline")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens prefetched per engine tick "
+                         "(default: 4 aligned chunks)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -60,7 +69,9 @@ def main():
                              decode_mode="ar" if args.mode == "ar"
                              else "elastic", obs=args.obs, seed=args.seed,
                              kv_pool_pages=args.kv_pages or 1 << 16,
-                             kv_admission=args.kv_admission)
+                             kv_admission=args.kv_admission,
+                             prefill_mode=args.prefill_mode,
+                             prefill_token_budget=args.prefill_budget)
         wl = PoissonWorkload(profile, args.rate, args.requests,
                              seed=args.seed)
         sched = make_scheduler(args.mode, backend, profile)
@@ -73,7 +84,9 @@ def main():
         backend = ModelBackend(model, params, n_slots=8, max_len=256,
                                decode_mode="ar" if args.mode == "ar"
                                else "elastic", obs=args.obs,
-                               kv_pages=args.kv_pages)
+                               kv_pages=args.kv_pages,
+                               prefill_mode=args.prefill_mode,
+                               prefill_token_budget=args.prefill_budget)
         import numpy as np
         rng = np.random.default_rng(args.seed)
         wl = PoissonWorkload(profile, args.rate, args.requests,

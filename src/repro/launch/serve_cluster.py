@@ -26,7 +26,8 @@ def run_cluster(args, profile):
         device=DEVICES[args.device], mode=args.mode,
         kv_pages=args.kv_pages, max_batch=args.max_batch, seed=args.seed,
         kv_watermark=args.kv_watermark, preemption=args.preemption,
-        kv_admission=args.kv_admission)
+        kv_admission=args.kv_admission, prefill_mode=args.prefill_mode,
+        prefill_token_budget=args.prefill_budget)
     wl = list(make_trace(profile, args.trace, args.rate, args.requests,
                          seed=args.seed))
     frac = args.high_priority_frac
@@ -63,6 +64,15 @@ def main():
                     choices=["incremental", "reserve"],
                     help="incremental page growth + memory preemption "
                          "(default) vs legacy worst-case reservation")
+    ap.add_argument("--prefill-mode", default="chunked",
+                    choices=["chunked", "wave"],
+                    help="chunked: interleave budget-bounded prefill "
+                         "chunks with replica decode ticks (default); "
+                         "wave: charge each admission's whole prompt "
+                         "synchronously (baseline)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens prefetched per replica tick "
+                         "(default: 4 aligned chunks)")
     ap.add_argument("--preemption", action="store_true",
                     help="evict low-priority requests under KV pressure")
     ap.add_argument("--high-priority-frac", type=float, default=None,

@@ -595,13 +595,19 @@ class TransformerLM:
                 "v_pages": jnp.zeros(shp, dtype)}
 
     def prefill_paged(self, params, cache, tokens, lengths, block_tables,
-                      mm_embeds=None, mm_mask=None):
+                      mm_embeds=None, mm_mask=None, head_mode="logits"):
         """Batched prompt forward writing KV into the page pool.
 
         tokens [B,T] (row-padded), lengths [B], block_tables [B,W] int32.
-        Returns (last-valid-position logits [B,V], new page cache) — the
-        whole admission wave runs as ONE forward, unlike the dense path's
-        sequential per-slot prefill.
+        The whole admission wave runs as ONE forward, unlike the dense
+        path's sequential per-slot prefill.
+
+        head_mode (static): "logits" returns the last-valid-position logits
+        [B,V]; "sample" reduces them on device via
+        :func:`repro.kernels.ops.softmax_confidence_device` and returns
+        (conf [B], tok [B]) — only AR requests ever read the prefill head,
+        and they need just the argmax, so serving never ships [B,V] logits
+        to the host.  Returns (head output, new page cache).
         """
         self._check_paged()
         cfg = self.cfg
@@ -620,9 +626,66 @@ class TransformerLM:
         P, ps = cache["k_pages"].shape[1], cache["k_pages"].shape[2]
         keep = positions < lengths[:, None]
         dest = _page_dest(block_tables, positions, keep, ps, P)
-        return logits, {
+        new_cache = {
             "k_pages": _scatter_pages(cache["k_pages"], kv["k"], dest),
             "v_pages": _scatter_pages(cache["v_pages"], kv["v"], dest)}
+        if head_mode == "sample":
+            from repro.kernels.ops import softmax_confidence_device
+            conf, tok = softmax_confidence_device(logits)
+            return (conf, tok), new_cache
+        return logits, new_cache
+
+    def prefill_chunk_paged(self, params, cache, tokens, offsets, valid,
+                            block_tables, *, impl: str = "kernel",
+                            interpret=None, mm_embeds=None, mm_mask=None):
+        """One resumable prefill chunk per row: forward prompt tokens
+        [offsets, offsets + valid) against the pages already written by
+        earlier chunks, and scatter this chunk's KV into the pool.
+
+        tokens [B,T] (row-padded chunk tokens), offsets [B] absolute chunk
+        start, valid [B] live tokens per row (0 ⇒ padded row, no writes).
+        The already-prefilled prefix is read through ``block_tables`` with
+        ``ctx_lens = offsets`` — the same paged-prefix partial the decode
+        windows use — and the in-window part applies the prefill mask
+        (block-causal for diffusion, causal otherwise) over absolute
+        positions.  Diffusion chunk boundaries must be block-aligned (a
+        mid-block split would hide the block's unprefilled tail from its
+        head, diverging from the wave forward); the serving-side
+        :class:`~repro.serving.backends.PrefillScheduler` guarantees this.
+
+        Returns (conf [B], tok [B], new page cache): the last-valid-position
+        head reduced on device — meaningful only for rows whose prompt
+        completes with this chunk (the AR first token), never [B,V] logits.
+        """
+        from repro.kernels.ops import softmax_confidence_device
+        self._check_paged()
+        B, T = tokens.shape
+        offs = jnp.arange(T, dtype=jnp.int32)
+        positions = offsets[:, None] + offs[None, :]
+        validm = offs[None, :] < valid[:, None]
+        shared = self._window_masks(cache, positions, validm, T)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        shared.update(block_tables=block_tables.astype(jnp.int32),
+                      ctx_lens=offsets.astype(jnp.int32),
+                      paged_impl=impl, paged_interpret=interpret)
+        per_layer = {f"pos{j}": {"page_k": cache["k_pages"],
+                                 "page_v": cache["v_pages"]}
+                     for j in self.attn_positions()}
+        x = self.embed(params, tokens, mm_embeds, mm_mask)
+        x, kvs, _ = self._stack(params, x, positions, shared, per_layer)
+        idx = jnp.clip(valid - 1, 0, T - 1)
+        xl = jnp.take_along_axis(
+            x, idx[:, None, None].astype(jnp.int32), axis=1)
+        logits = self.head(params, xl)[:, 0]
+        kv = self._collect_kv(kvs)
+        P, ps = cache["k_pages"].shape[1], cache["k_pages"].shape[2]
+        dest = _page_dest(block_tables, positions, validm, ps, P)
+        new_cache = {
+            "k_pages": _scatter_pages(cache["k_pages"], kv["k"], dest),
+            "v_pages": _scatter_pages(cache["v_pages"], kv["v"], dest)}
+        conf, tok = softmax_confidence_device(logits)
+        return conf, tok, new_cache
 
     def chunk_forward_paged(self, params, cache, win_tokens, win_start,
                             win_valid, block_tables, ctx_lens, *,

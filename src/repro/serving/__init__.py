@@ -1,4 +1,5 @@
-from repro.serving.backends import ARState, ModelBackend, SimBackend, StepInfo
+from repro.serving.backends import (ARState, ModelBackend, PrefillScheduler,
+                                    SimBackend, StepInfo)
 from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.engine import EngineCore, EngineReport, ServingEngine
 from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
@@ -11,7 +12,8 @@ from repro.serving.workload import (DATASETS, CommitSimulator, DatasetProfile,
                                     fixed_batch_workload, make_trace)
 
 __all__ = [
-    "ARState", "ModelBackend", "SimBackend", "StepInfo", "VirtualClock",
+    "ARState", "ModelBackend", "PrefillScheduler", "SimBackend", "StepInfo",
+    "VirtualClock",
     "WallClock", "EngineCore", "EngineReport", "ServingEngine", "OutOfPages",
     "PagedKVAllocator", "ClusterReport", "chunk_distribution", "slo_capacity",
     "Request", "RequestMetrics", "DATASETS", "CommitSimulator",

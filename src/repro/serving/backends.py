@@ -104,6 +104,93 @@ def _decode_mode_for(cfg: ArchConfig, decode_mode: str) -> str:
 
 
 # ===========================================================================
+# Chunked-prefill scheduling (shared by sim and model backends)
+# ===========================================================================
+
+class PrefillScheduler:
+    """FCFS token-budget planner over per-request prefill cursors.
+
+    Admission claims a request's prompt pages up front but defers the
+    prefill *compute*; each engine tick ``plan()`` hands out at most
+    ``budget`` prompt tokens across the queue in arrival order, so a bursty
+    admission wave of long prompts can no longer stall in-flight decodes
+    for the whole wave's prefill latency (the head-of-line blocking the
+    monolithic ``prefill_mode="wave"`` forward exhibits).
+
+    Chunk ends are aligned to ``align`` absolute positions — a page
+    boundary, raised to lcm(page, block) for diffusion models, where a
+    mid-block split would hide a block's unprefilled tail from its own
+    head and diverge from the wave forward — except a prompt's final
+    chunk.  The budget is clamped to at least ``align`` so alignment can
+    never stall the queue head: the head request always receives tokens
+    every tick (no starvation), and later requests only wait on FCFS
+    order.
+    """
+
+    def __init__(self, budget: int | None, align: int):
+        self.align = max(1, int(align))
+        self.budget = max(int(budget), self.align) if budget is not None \
+            else 4 * self.align
+        self.queue: list[Request] = []        # FCFS over admissions
+        self.cursor: dict[int, int] = {}      # rid → prompt tokens prefilled
+
+    def add(self, req: Request):
+        self.queue.append(req)
+        self.cursor[req.rid] = 0
+
+    def remove(self, rid: int):
+        """Drop a request (release / preemption): the cursor is discarded —
+        its pages are freed with it, so re-admission restarts at 0."""
+        if rid in self.cursor:
+            self.queue = [r for r in self.queue if r.rid != rid]
+            del self.cursor[rid]
+
+    def pending(self, rid: int) -> bool:
+        return rid in self.cursor
+
+    @property
+    def backlog(self) -> int:
+        return sum(r.prompt_len - self.cursor[r.rid] for r in self.queue)
+
+    def plan(self) -> list[tuple[Request, int, int]]:
+        """This tick's chunk assignments [(req, offset, n_tokens)]:
+        Σ n_tokens ≤ budget, FCFS, ends aligned except final chunks."""
+        out, left = [], self.budget
+        for req in self.queue:
+            if left <= 0:
+                break
+            off = self.cursor[req.rid]
+            end = min(off + left, req.prompt_len)
+            if end < req.prompt_len:
+                aligned = (end // self.align) * self.align
+                if aligned <= off:      # leftover budget < one aligned chunk
+                    break
+                end = aligned
+            out.append((req, off, end - off))
+            left -= end - off
+        return out
+
+    def advance(self, rid: int, n: int) -> bool:
+        """Move a cursor forward; True when the prompt is fully prefilled
+        (the request leaves the queue)."""
+        req = next(r for r in self.queue if r.rid == rid)
+        self.cursor[rid] += n
+        if self.cursor[rid] >= req.prompt_len:
+            self.remove(rid)
+            return True
+        return False
+
+
+def _prefill_align(page_size: int, cfg: ArchConfig) -> int:
+    """Chunk-boundary alignment: page-sized, raised to lcm(page, block) for
+    diffusion models (block-causal prefill must not split a block)."""
+    if not cfg.diffusion:
+        return page_size
+    import math
+    return page_size * cfg.block_size // math.gcd(page_size, cfg.block_size)
+
+
+# ===========================================================================
 # Incremental page-growth step protocol (shared by sim and model backends)
 # ===========================================================================
 
@@ -170,7 +257,29 @@ class SimBackend:
     grows per-step (preemption-on-OutOfPages semantics); ``"reserve"`` keeps
     the legacy worst-case ``prompt + max_new_tokens`` reservation at admit —
     the static-admission baseline the kv_pressure benchmark compares
-    against."""
+    against.
+
+    ``prefill_mode="chunked"`` defers prefill *latency* into the decode
+    loop: admission claims prompt pages and returns immediately, and each
+    decode tick charges at most ``prefill_token_budget`` prompt tokens of
+    prefill alongside the decode dispatch (requests join decode the tick
+    their last chunk lands).  ``"wave"`` (default, the historical sim
+    behavior) charges the whole prompt's latency synchronously at
+    admission — an admission wave stalls every in-flight decode for its
+    full prefill span.  With ``include_prefill=False`` prefill is free and
+    the modes coincide.
+
+    Commit randomness is drawn from **per-request streams** (seeded by
+    ``(seed, rid)``), so a request's simulated trajectory depends only on
+    the sequence of window sizes it is stepped with, never on batch
+    composition: under a fixed chunk schedule, wave and chunked prefill
+    commit bit-identical tokens, and a preempted request replays its exact
+    output after re-admission — the same two invariants the real-model
+    backend's deterministic argmax decode has.  (An elastic scheduler may
+    pick different chunks under the two prefill modes — the prefill
+    signal changes its saturation estimate — which legitimately changes
+    the per-request window sequence and hence its tokens, on either
+    backend.)"""
 
     def __init__(self, cfg: ArchConfig, device: DeviceSpec = TPU_V5E,
                  n_chips: int = 1, tokens_per_step: float = 3.8,
@@ -178,12 +287,16 @@ class SimBackend:
                  kv_pool_pages: int = 1 << 16, page_size: int = 16,
                  obs: bool = False, obs_policy: str = "large_chunk",
                  seed: int = 0, include_prefill: bool = True,
-                 kv_admission: str = "incremental"):
+                 kv_admission: str = "incremental",
+                 prefill_mode: str = "wave",
+                 prefill_token_budget: int | None = None):
         """obs_policy: the paper enables out-block streaming only for the
         largest chunk (§7.2) — "large_chunk" applies OBS when the scheduler
         picks chunk == block_size; "off"/"always" override."""
         if kv_admission not in ("incremental", "reserve"):
             raise ValueError(f"unknown kv_admission {kv_admission!r}")
+        if prefill_mode not in ("chunked", "wave"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.cfg = cfg
         self.analytic = AnalyticDeviceModel(cfg, device, n_chips)
         self.sim = CommitSimulator(tokens_per_step, gamma, cfg.block_size,
@@ -195,8 +308,20 @@ class SimBackend:
         self.obs = obs
         self.obs_policy = "always" if obs else obs_policy
         self.include_prefill = include_prefill
+        self.prefill_mode = prefill_mode
+        self._prefill = PrefillScheduler(prefill_token_budget,
+                                         _prefill_align(page_size, cfg))
+        self.prefill_tokens_history: list[int] = []
         self._states: dict[int, object] = {}
-        self._rng = np.random.default_rng(seed + 1)
+        self._seed = seed
+        self._req_rng: dict[int, np.random.Generator] = {}
+
+    def _rng_of(self, rid: int) -> np.random.Generator:
+        rng = self._req_rng.get(rid)
+        if rng is None:
+            rng = self._req_rng[rid] = np.random.default_rng(
+                np.random.SeedSequence([self._seed, rid]))
+        return rng
 
     # ------------------------------------------------------------------
     def admit_pages(self, req: Request) -> int:
@@ -233,12 +358,18 @@ class SimBackend:
             self.kv.allocate(req.rid, req.prompt_len)
         if not self.include_prefill:
             return 0.0
+        if self.prefill_mode == "chunked":
+            # prefill latency is charged chunk-by-chunk inside decode ticks
+            self._prefill.add(req)
+            return 0.0
         return self.analytic.step_latency(1, req.prompt_len,
                                           ctx=req.prompt_len / 2)
 
     def release(self, rid: int):
+        self._prefill.remove(rid)
         self.kv.free(rid)
         self._states.pop(rid)
+        self._req_rng.pop(rid, None)
 
     def state(self, rid: int):
         return self._states[rid]
@@ -246,15 +377,50 @@ class SimBackend:
     def step_page_deficit(self, rids, chunk: int) -> int:
         if self.kv_admission == "reserve" or not rids:
             return 0
+        rids = [r for r in rids if not self._prefill.pending(r)]
+        if not rids:
+            return 0
         return _step_page_deficit(self.kv, self._states, rids, chunk)
+
+    def prefill_tick_tokens(self) -> int:
+        """Prompt tokens the next tick's prefill phase will process — the
+        saturation signal the elastic scheduler folds into chunk choice."""
+        backlog = self._prefill.backlog
+        return min(self._prefill.budget, backlog)
+
+    def decode_batch_size(self, rids) -> int:
+        """Requests the next decode dispatch will actually include —
+        mid-prefill rids sit the dispatch out (wave/synchronous prefill
+        never leaves any pending)."""
+        if self.prefill_mode == "wave":
+            return len(rids)
+        return sum(1 for r in rids if not self._prefill.pending(r))
+
+    def _prefill_phase(self) -> tuple[int, float]:
+        """Advance this tick's prefill chunks (FCFS, budget-bounded);
+        returns (tokens, token-weighted mean context) for the tick's fused
+        latency charge.  The chunks are co-batched with the decode dispatch
+        — weights stream once per tick — so their cost is the marginal
+        ``b·c`` workload they add, not a standalone per-chunk forward
+        (which would re-pay the weight-read floor once per chunk)."""
+        if not self._prefill.queue:
+            return 0, 0.0
+        plan = self._prefill.plan()
+        tokens = sum(n for _, _, n in plan)
+        ctx = sum((off + n / 2) * n for _, off, n in plan) / max(tokens, 1)
+        for req, off, n in plan:
+            self._prefill.advance(req.rid, n)
+        self.prefill_tokens_history.append(tokens)
+        return tokens, ctx
 
     # ------------------------------------------------------------------
     def _step_slide_batched(self, rids, states, chunk, infos, ctxs,
                             eff_chunks):
         """Slide-mode step, vectorized across the batch via
-        ``batch_windows`` / ``batch_apply_step``.  RNG consumption stays in
-        rid order with the same draw sizes as the historical per-rid loop,
-        so sim trajectories are bit-identical."""
+        ``batch_windows`` / ``batch_apply_step``.  Draw sizes and order per
+        request match the historical scalar loop, from each request's own
+        stream — so trajectories are bit-identical to serving the request
+        in any batch mix."""
         obs = (self.obs_policy == "always" or
                (self.obs_policy == "large_chunk"
                 and chunk >= self.cfg.block_size))
@@ -269,8 +435,9 @@ class SimBackend:
         conf = np.zeros((B, c))
         tok = np.zeros((B, c), np.int64)
         for i in np.nonzero(valid > 0)[0]:
-            conf[i] = self.sim.confidences(depths[i])
-            tok[i] = self._rng.integers(5, 1000, size=c)
+            rng = self._rng_of(rids[i])
+            conf[i] = self.sim.confidences(depths[i], rng=rng)
+            tok[i] = rng.integers(5, 1000, size=c)
         commit, n_adv = batch_apply_step(states, conf, tok, valid, cai)
         for i, (rid, st) in enumerate(zip(rids, states)):
             if valid[i] == 0:
@@ -284,22 +451,24 @@ class SimBackend:
             eff_chunks.append(int(valid[i]))
 
     def decode_step(self, rids, chunk: int):
-        if self.kv_admission == "incremental" and rids:
+        pf_tokens, pf_ctx = self._prefill_phase()
+        decode_rids = [r for r in rids if not self._prefill.pending(r)]
+        if self.kv_admission == "incremental" and decode_rids:
             # transactional worst-case reservation BEFORE any state mutates
-            _reserve_step(self.kv, self._states, rids, chunk)
+            _reserve_step(self.kv, self._states, decode_rids, chunk)
         infos = {}
         ctxs, eff_chunks = [], []
-        states = [self._states[rid] for rid in rids]
+        states = [self._states[rid] for rid in decode_rids]
         if states and not isinstance(states[0], ARState) \
                 and states[0].mode == "slide":
-            self._step_slide_batched(rids, states, chunk, infos, ctxs,
-                                     eff_chunks)
+            self._step_slide_batched(decode_rids, states, chunk, infos,
+                                     ctxs, eff_chunks)
         else:
             # AR and block-pinned (hybrid) stay on the scalar path: AR is a
             # single RNG draw per rid, pinned windows have per-step widths
-            for rid, st in zip(rids, states):
+            for rid, st in zip(decode_rids, states):
                 if isinstance(st, ARState):
-                    st.commit(int(self._rng.integers(5, 1000)))
+                    st.commit(int(self._rng_of(rid).integers(5, 1000)))
                     infos[rid] = StepInfo(1, np.ones(1, bool), 1, st.done)
                     ctxs.append(st.prompt_len + st.frozen)
                     eff_chunks.append(1)
@@ -310,11 +479,12 @@ class SimBackend:
                                           st.done)
                     ctxs.append(st.prompt_len + st.frozen)
                     continue
+                rng = self._rng_of(rid)
                 first_unc = next((i for i in range(valid) if not cai[i]),
                                  valid)
                 depths = np.maximum(np.arange(len(toks)) - first_unc, 0)
-                conf = self.sim.confidences(depths)
-                tok = self._rng.integers(5, 1000, size=len(toks))
+                conf = self.sim.confidences(depths, rng=rng)
+                tok = rng.integers(5, 1000, size=len(toks))
                 commit_mask, n_adv = st.apply_step(conf, tok, valid, cai)
                 st.advance(n_adv)
                 infos[rid] = StepInfo(int(commit_mask.sum()), commit_mask,
@@ -322,11 +492,25 @@ class SimBackend:
                 ctxs.append(st.prompt_len + st.frozen)
                 eff_chunks.append(valid)
         if self.kv_admission == "incremental":
-            _trim_step(self.kv, self._states, rids)
-        b = max(1, len(rids))
+            _trim_step(self.kv, self._states, decode_rids)
+        for rid in rids:                      # still-prefilling: idle info
+            if rid not in infos:
+                infos[rid] = StepInfo(0, np.zeros(1, bool), 0, False)
+        if not decode_rids:
+            # prefill-only tick: one batched chunk forward
+            return self.analytic.step_latency(1, pf_tokens, pf_ctx), infos
+        b = max(1, len(decode_rids))
         c_eff = max(1, int(round(float(np.mean(eff_chunks)))) if eff_chunks
                     else 1)
         ctx = float(np.mean(ctxs)) if ctxs else 1.0
+        if pf_tokens:
+            # fused tick: prefill chunks ride the decode dispatch — charge
+            # the combined b·c workload at the token-weighted context
+            dec_tokens = b * c_eff
+            ctx = (ctx * dec_tokens + pf_ctx * pf_tokens) \
+                / (dec_tokens + pf_tokens)
+            return self.analytic.step_latency(b, c_eff + pf_tokens / b,
+                                              ctx), infos
         return self.analytic.step_latency(b, c_eff, ctx), infos
 
 
@@ -345,12 +529,28 @@ class ModelBackend:
     step reserves its worst-case growth, freezes realized commits into the
     pool, and trims the rest back — the same memory-elastic semantics as
     :class:`SimBackend`, so cluster admission and the saturation router
-    read one KV-pressure signal for both.  Admitted prompts are
-    *batch-prefilled* in one forward, deferred to the next decode step (an
-    AR request therefore gets its prefill-derived first token at the end of
-    the first decode iteration instead of at admit time).  The old
-    dense-slot decode path for attention families was retired; requesting
-    ``paged=False`` for them raises.
+    read one KV-pressure signal for both.  The old dense-slot decode path
+    for attention families was retired; requesting ``paged=False`` for
+    them raises.
+
+    **Chunked prefill** (``prefill_mode="chunked"``, the default): prompt
+    prefill is a scheduled resource, not a side effect of admission.  A
+    per-request cursor resumes ``TransformerLM.prefill_chunk_paged`` from
+    its offset (prefix attention over the pages earlier chunks already
+    wrote), and each decode tick mixes at most ``prefill_token_budget``
+    prompt tokens of prefill work in *before* the decode dispatch, so a
+    bursty admission wave of long prompts cannot stall in-flight decodes
+    for the whole wave's prefill latency.  ``prefill_mode="wave"`` retains
+    the monolithic one-``[B, Tp]``-forward behavior as the baseline; under
+    a fixed chunk schedule both modes commit bit-identical tokens (argmax
+    decoding is batch- and timing-independent, so a request's tokens
+    depend only on its own window sequence).  Either way the prefill
+    dispatch returns only
+    ``[B]`` confidence/argmax scalars (diffusion admissions never read the
+    prefill head; AR needs just the argmax), never ``[B, V]`` logits, and
+    the transfer is counted in ``host_transfer_bytes``.  An AR request
+    gets its prefill-derived first token at the end of the tick its last
+    chunk lands.
 
     **Recurrent-slot mode** (ssm/hybrid): recurrent states cannot be paged,
     so these families keep a fixed ``n_slots``-row cache — rwkv AR steps and
@@ -363,11 +563,14 @@ class ModelBackend:
                  cache_dtype=np.float32, paged: bool | None = None,
                  kv_pages: int | None = None, page_size: int | None = None,
                  attn_impl: str | None = None, interpret: bool | None = None,
-                 fused: bool = True):
+                 fused: bool = True, prefill_mode: str = "chunked",
+                 prefill_token_budget: int | None = None):
         import functools
 
         import jax
         import jax.numpy as jnp
+        if prefill_mode not in ("chunked", "wave"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
         self.jax, self.jnp = jax, jnp
         self.model = model
         self.cfg = model.cfg
@@ -379,12 +582,14 @@ class ModelBackend:
         supports = model.supports_paged()
         self.paged = supports if paged is None else paged
         self.grows_kv = self.paged
+        self.prefill_mode = prefill_mode
         self._states: dict[int, object] = {}
         self._req: dict[int, Request] = {}
         # hot-path telemetry (decode_step_bench / acceptance tests)
         self.decode_dispatches = 0       # jit dispatches issued by decode
         self.prefill_dispatches = 0      # jit dispatches issued by prefill
         self.host_transfer_bytes = 0     # device→host bytes pulled by decode
+        self.prefill_tokens_history: list[int] = []  # prompt tokens per tick
 
         if self.paged:
             model._check_paged()
@@ -396,7 +601,8 @@ class ModelBackend:
             self.kv = PagedKVAllocator(kv_pages, ps)
             self.kv.init_storage(*model.paged_kv_dims(), dtype=cache_dtype)
             self._table_width = self.kv.pages_for(max_len)
-            self._pending_prefill: list[Request] = []
+            self._prefill = PrefillScheduler(prefill_token_budget,
+                                             _prefill_align(ps, self.cfg))
             impl = attn_impl if attn_impl is not None \
                 else self.cfg.paged_attn_impl
             self.fused = fused
@@ -408,8 +614,12 @@ class ModelBackend:
             # immediately replaces them with the step's outputs, and any
             # stale outside reference raises on use ("Array has been
             # deleted") rather than reading freed memory.
-            self._prefill_paged = jax.jit(model.prefill_paged,
-                                          donate_argnums=(1,))
+            self._prefill_paged = jax.jit(
+                functools.partial(model.prefill_paged, head_mode="sample"),
+                donate_argnums=(1,))
+            self._prefill_chunk = jax.jit(functools.partial(
+                model.prefill_chunk_paged, impl=impl, interpret=interpret),
+                donate_argnums=(1,))
             self._chunk_paged = jax.jit(functools.partial(
                 model.chunk_forward_paged, impl=impl, interpret=interpret))
             self._freeze_paged = jax.jit(model.freeze_paged,
@@ -505,10 +715,12 @@ class ModelBackend:
         self._states[req.rid] = st = self._make_state(req)
         if self.paged:
             # claim the prompt's pages only; decode steps grow the table
-            # incrementally.  The prefill forward itself is deferred and
-            # batched with every other admission of this engine iteration.
+            # incrementally.  The prefill forward itself is deferred to the
+            # decode loop: the whole wave in one forward (wave mode), or
+            # budget-bounded page-aligned chunks interleaved with decode
+            # dispatches (chunked mode).
             self.kv.allocate(req.rid, req.prompt_len)
-            self._pending_prefill.append(req)
+            self._prefill.add(req)
             return 0.0
 
         jnp = self.jnp
@@ -530,8 +742,10 @@ class ModelBackend:
 
     def release(self, rid: int):
         if self.paged:
-            self._pending_prefill = [r for r in self._pending_prefill
-                                     if r.rid != rid]
+            # a mid-prefill victim's cursor is discarded with its pages:
+            # re-admission restarts prefill at offset 0, and none of the
+            # completed chunks were ever banked as decode work
+            self._prefill.remove(rid)
             self.kv.free(rid)
             self._states.pop(rid)
             self._req.pop(rid)
@@ -560,7 +774,30 @@ class ModelBackend:
     def step_page_deficit(self, rids, chunk: int) -> int:
         if not self.paged or not rids:
             return 0
+        # mid-prefill requests don't decode this tick: their prompt pages
+        # are fully claimed already and they contribute no step growth
+        rids = [r for r in rids if not self._prefill.pending(r)]
+        if not rids:
+            return 0
         return _step_page_deficit(self.kv, self._states, rids, chunk)
+
+    def prefill_tick_tokens(self) -> int:
+        """Prompt tokens the next tick's prefill phase will process — the
+        saturation signal the elastic scheduler folds into chunk choice."""
+        if not self.paged:
+            return 0
+        backlog = self._prefill.backlog
+        if self.prefill_mode == "wave":
+            return backlog
+        return min(self._prefill.budget, backlog)
+
+    def decode_batch_size(self, rids) -> int:
+        """Requests the next decode dispatch will actually include —
+        mid-prefill rids sit the dispatch out in chunked mode, but join it
+        in wave mode (the wave flush completes before the dispatch)."""
+        if not self.paged or self.prefill_mode == "wave":
+            return len(rids)
+        return sum(1 for r in rids if not self._prefill.pending(r))
 
     # ------------------------------------------------------------------
     def _step_ar_recurrent(self, ar_rids, infos):
@@ -603,13 +840,16 @@ class ModelBackend:
         self.kv.k_pages = pages["k_pages"]
         self.kv.v_pages = pages["v_pages"]
 
-    def _flush_prefills(self):
-        """Run every deferred admission as ONE batched prefill forward
-        (page pool donated — the prefill scatters into the pool in place)."""
-        if not self._pending_prefill:
-            return
+    def _flush_prefills(self) -> set:
+        """Wave mode: run the whole deferred backlog as ONE batched prefill
+        forward (page pool donated — the prefill scatters into the pool in
+        place).  Only the ``[B]`` device-reduced conf/argmax scalars come
+        back to the host.  Returns rids that received their prefill-derived
+        first token (AR)."""
+        reqs = list(self._prefill.queue)
+        if not reqs:
+            return set()
         jnp = self.jnp
-        reqs, self._pending_prefill = self._pending_prefill, []
         B = len(reqs)
         Bp = self._bucket(B)
         Tp = self._bucket(max(r.prompt_len for r in reqs))
@@ -621,17 +861,72 @@ class ModelBackend:
         for i, r in enumerate(reqs):
             toks[i, :r.prompt_len] = np.asarray(r.prompt_tokens, np.int32)
             lens[i] = r.prompt_len
-        last_logits, pages = self._prefill_paged(
+        (conf, tok), pages = self._prefill_paged(
             self.params, self._pages_cache(), jnp.asarray(toks),
             jnp.asarray(lens, jnp.int32), jnp.asarray(tables))
         self._store_pages(pages)
         self.prefill_dispatches += 1
-        last_logits = np.asarray(last_logits)
+        conf = np.asarray(conf)
+        tok = np.asarray(tok)
+        self.host_transfer_bytes += conf.nbytes + tok.nbytes
+        fresh = set()
         for i, r in enumerate(reqs):
+            self._prefill.advance(r.rid, r.prompt_len)
             st = self._states[r.rid]
             if isinstance(st, ARState):
-                _, tok = softmax_confidence(last_logits[i])
-                st.commit(int(tok))
+                st.commit(int(tok[i]))
+                fresh.add(r.rid)
+        self.prefill_tokens_history.append(sum(r.prompt_len for r in reqs))
+        return fresh
+
+    def _chunked_prefill_tick(self) -> set:
+        """Chunked mode: one dispatch advancing up to ``budget`` prompt
+        tokens of prefill cursors (FCFS, page-aligned chunk ends).  Returns
+        rids whose prompt completed this tick AND received their
+        prefill-derived first token (AR)."""
+        plan = self._prefill.plan()
+        if not plan:
+            return set()
+        jnp = self.jnp
+        B = len(plan)
+        Bp = self._bucket(B)
+        Tp = self._bucket(max(n for _, _, n in plan))
+        toks = np.zeros((Bp, Tp), np.int32)
+        offs = np.zeros(Bp, np.int64)
+        val = np.zeros(Bp, np.int64)
+        tables = np.zeros((Bp, self._table_width), np.int32)
+        tables[:B] = self.kv.batch_tables([req.rid for req, _, _ in plan],
+                                          self._table_width)
+        for i, (req, off, n) in enumerate(plan):
+            toks[i, :n] = np.asarray(req.prompt_tokens[off:off + n],
+                                     np.int32)
+            offs[i] = off
+            val[i] = n
+        conf, tok, pages = self._prefill_chunk(
+            self.params, self._pages_cache(), jnp.asarray(toks),
+            jnp.asarray(offs, jnp.int32), jnp.asarray(val, jnp.int32),
+            jnp.asarray(tables))
+        self._store_pages(pages)
+        self.prefill_dispatches += 1
+        conf = np.asarray(conf)
+        tok = np.asarray(tok)
+        self.host_transfer_bytes += conf.nbytes + tok.nbytes
+        fresh = set()
+        for i, (req, off, n) in enumerate(plan):
+            if self._prefill.advance(req.rid, n):
+                st = self._states[req.rid]
+                if isinstance(st, ARState):
+                    st.commit(int(tok[i]))
+                    fresh.add(req.rid)
+        self.prefill_tokens_history.append(sum(n for _, _, n in plan))
+        return fresh
+
+    def _prefill_tick(self) -> set:
+        if not self._prefill.queue:
+            return set()
+        if self.prefill_mode == "wave":
+            return self._flush_prefills()
+        return self._chunked_prefill_tick()
 
     def _dispatch_window(self, rids, win, start, valid, n_adv):
         """Run one paged decode dispatch for an assembled window batch.
@@ -741,8 +1036,11 @@ class ModelBackend:
     def decode_step(self, rids, chunk: int):
         infos: dict[int, StepInfo] = {}
         if self.paged:
-            self._flush_prefills()
-            ar_rids, diff_rids = self._split_ar(rids, infos)
+            fresh = self._prefill_tick()
+            # requests whose prompt is still mid-prefill sit this decode
+            # dispatch out; ones whose last chunk just landed join it
+            ready = [r for r in rids if not self._prefill.pending(r)]
+            ar_rids, diff_rids = self._split_ar(ready, infos)
             live = ar_rids + diff_rids
             if live:
                 # worst-case page reservation; transactional OutOfPages
@@ -754,6 +1052,21 @@ class ModelBackend:
                 self._step_diffusion_paged(diff_rids, chunk, infos)
             if live:
                 _trim_step(self.kv, self._states, live)
+            for r in rids:                    # still-prefilling: idle info
+                if r not in infos:
+                    infos[r] = StepInfo(0, np.zeros(1, bool), 0, False)
+            for r in fresh:
+                # surface the prefill-derived AR first token in this tick's
+                # StepInfo so the engine stamps TTFT at the tick the last
+                # chunk completed (valid_len stays untouched: prefill
+                # commits don't feed the TU estimator)
+                fi = infos.get(r)
+                if fi is None:
+                    infos[r] = StepInfo(1, np.ones(1, bool), 0,
+                                        self._states[r].done)
+                else:
+                    infos[r] = StepInfo(fi.n_committed + 1, fi.commit_mask,
+                                        fi.valid_len, fi.done)
             return 0.0, infos
 
         # recurrent-slot families (ssm AR, hybrid block-pinned diffusion)

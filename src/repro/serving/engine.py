@@ -255,7 +255,13 @@ class EngineCore:
             now = self.clock.now()
             st = self.backend.state(req.rid)
             if st.n_committed > 0 and m.first_token_time < 0:
-                m.first_token_time = now     # AR: token from prefill
+                # recurrent-slot AR: prefill runs synchronously inside this
+                # tick and commits the first token at admit.  Deferred
+                # (paged) backends commit nothing here — their stamp comes
+                # from the StepInfo of the tick the last prefill chunk
+                # completes.
+                m.first_token_time = now
+                m.last_token_time = now
             self._active.append(req)
 
     # -- memory preemption (OutOfPages pressure relief) --------------------
@@ -308,12 +314,30 @@ class EngineCore:
                 return
 
     # -- one elastic decode iteration --------------------------------------
+    def _prefill_tick_tokens(self) -> int:
+        """Prompt tokens the backend's chunked-prefill phase will mix into
+        the next tick (0 for backends without deferred prefill)."""
+        fn = getattr(self.backend, "prefill_tick_tokens", None)
+        return fn() if fn is not None else 0
+
     def _decode_once(self):
-        b = len(self._active)
+        # b = the batch the decode dispatch will actually run: mid-prefill
+        # requests are active but sit chunked-mode dispatches out — their
+        # load reaches the scheduler through prefill_tokens, not b (double-
+        # counting them would model a far bigger decode than dispatched)
+        size_fn = getattr(self.backend, "decode_batch_size", None)
+        b = size_fn([r.rid for r in self._active]) \
+            if size_fn is not None else len(self._active)
+        pf = self._prefill_tick_tokens()
         try:
-            chunk = self.scheduler.select(b, kv_util=self._kv_utilization())
-        except TypeError:           # scheduler predates the memory signal
-            chunk = self.scheduler.select(b)
+            chunk = self.scheduler.select(b, kv_util=self._kv_utilization(),
+                                          prefill_tokens=pf)
+        except TypeError:           # scheduler predates the prefill signal
+            try:
+                chunk = self.scheduler.select(
+                    b, kv_util=self._kv_utilization())
+            except TypeError:       # ... or the memory signal
+                chunk = self.scheduler.select(b)
         self._ensure_step_capacity(chunk)
         while True:
             rids = [r.rid for r in self._active]
@@ -339,8 +363,16 @@ class EngineCore:
         for req in self._active:
             info = infos[req.rid]
             m = self._metrics[req.rid]
-            if info.n_committed > 0 and m.first_token_time < 0:
-                m.first_token_time = now
+            if info.n_committed > 0:
+                # first_token_time lands the tick the commit happened — for
+                # chunked prefill that is the tick the LAST prompt chunk
+                # completed (the backend surfaces the prefill-derived AR
+                # token in that tick's StepInfo), not admission time
+                if m.first_token_time < 0:
+                    m.first_token_time = now
+                else:
+                    m.max_itl = max(m.max_itl, now - m.last_token_time)
+                m.last_token_time = now
             if info.valid_len > 0:
                 commit_masks.append(info.commit_mask)
                 valids.append(info.valid_len)

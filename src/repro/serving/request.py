@@ -23,6 +23,8 @@ class RequestMetrics:
     arrival_time: float
     admit_time: float = -1.0
     first_token_time: float = -1.0
+    last_token_time: float = -1.0
+    max_itl: float = 0.0               # max gap between token-commit ticks
     finish_time: float = -1.0
     n_tokens: int = 0
     computed_tokens: int = 0

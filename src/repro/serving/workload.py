@@ -93,16 +93,22 @@ class CommitSimulator:
     def p(self, depth):
         return np.minimum(1.0, self.p0 * self.gamma ** np.asarray(depth))
 
-    def confidences(self, depths: np.ndarray) -> np.ndarray:
+    def confidences(self, depths: np.ndarray, rng=None) -> np.ndarray:
         """depths: distance of each uncommitted window position from the
-        first-uncommitted frontier.  Returns pseudo-confidences in [0,1]."""
+        first-uncommitted frontier.  Returns pseudo-confidences in [0,1].
+
+        ``rng`` overrides the simulator's shared stream — the serving
+        backend passes a per-request stream so a request's commit
+        trajectory is independent of batch composition (what makes
+        wave/chunked prefill and preemption-replay runs bit-comparable)."""
+        rng = self.rng if rng is None else rng
         p = self.p(depths)
-        u = self.rng.random(len(depths))
+        u = rng.random(len(depths))
         hit = u < p
         lo, hi = self.threshold, 1.0
         conf = np.where(hit,
-                        lo + (hi - lo) * self.rng.random(len(depths)) + 1e-6,
-                        lo * self.rng.random(len(depths)))
+                        lo + (hi - lo) * rng.random(len(depths)) + 1e-6,
+                        lo * rng.random(len(depths)))
         return conf
 
     def expected_commits(self, c: int) -> float:

@@ -1,0 +1,315 @@
+"""Chunked prefill (ISSUE 5): wave/chunked committed-token equivalence
+across slide/obs/ar on Sim and paged Model backends, prefill-scheduler
+budget/starvation properties, TTFT stamping at the last-chunk tick,
+mid-prefill preemption bookkeeping, and prefill host-transfer accounting.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import FixedScheduler
+from repro.core.latency_model import A100_80G
+from repro.models import ArchConfig, build_model
+from repro.serving import (DATASETS, EngineCore, ModelBackend,
+                           PoissonWorkload, PrefillScheduler, Request,
+                           ServingEngine, SimBackend)
+
+SIM_CFG = ArchConfig(name="sim8b", family="dense", n_layers=36, d_model=4096,
+                     n_heads=32, n_kv_heads=8, d_ff=12288, vocab_size=151936,
+                     block_size=32)
+CFG = ArchConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                 n_kv_heads=2, d_ff=128, vocab_size=256, block_size=8,
+                 confidence_threshold=0.6)
+CFG_AR = ArchConfig(name="tar", family="dense", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                    block_size=8, diffusion=False)
+PROF = DATASETS["sharegpt"]
+
+
+@pytest.fixture(scope="module")
+def diff_model():
+    model = build_model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ar_model():
+    model = build_model(CFG_AR)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _model_requests(n, seed=0, prompt=40, out=16, simultaneous=True):
+    rng = np.random.default_rng(seed)
+    reqs = list(PoissonWorkload(PROF, 50.0, n, seed=seed))
+    for r in reqs:
+        r.prompt_len = prompt
+        r.max_new_tokens = out
+        r.prompt_tokens = rng.integers(4, CFG.vocab_size, prompt).tolist()
+        if simultaneous:
+            r.arrival_time = 0.0
+    return reqs
+
+
+def _run(be, reqs, chunk=8, max_batch=8):
+    """Run and capture each request's committed tokens at release."""
+    eng = ServingEngine(be, FixedScheduler(chunk), max_batch=max_batch)
+    outs = {}
+    orig_release = be.release
+
+    def spy_release(rid):
+        outs[rid] = be.state(rid).output_tokens
+        orig_release(rid)
+
+    be.release = spy_release
+    rep = eng.run(reqs)
+    return rep, outs
+
+
+# ---------------------------------------------------------------------------
+# equivalence: chunked and wave prefill commit bit-identical tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["slide", "obs", "ar"])
+def test_model_chunked_matches_wave(diff_model, ar_model, variant):
+    """Paged ModelBackend: interleaved page-aligned prefill chunks must
+    commit exactly the tokens the monolithic wave prefill commits — the
+    stall fix cannot change outputs."""
+    model, params = (ar_model if variant == "ar" else diff_model)
+
+    def run(mode):
+        be = ModelBackend(model, params, n_slots=8, max_len=64,
+                          decode_mode="ar" if variant == "ar" else "elastic",
+                          obs=variant == "obs", prefill_mode=mode,
+                          prefill_token_budget=16)
+        reqs = _model_requests(6, seed=3, prompt=40, out=16)
+        return _run(be, reqs, chunk=1 if variant == "ar" else 8)
+
+    rep_w, out_w = run("wave")
+    rep_c, out_c = run("chunked")
+    assert len(rep_w.metrics) == len(rep_c.metrics) == 6
+    assert out_c == out_w                       # bit-identical tokens
+    assert {m.rid: m.n_tokens for m in rep_c.metrics} == \
+        {m.rid: m.n_tokens for m in rep_w.metrics}
+
+
+@pytest.mark.parametrize("variant", ["slide", "obs", "ar"])
+def test_sim_chunked_matches_wave(variant):
+    """SimBackend: per-request commit streams make the simulated trajectory
+    independent of prefill timing, so both prefill modes commit
+    bit-identical tokens on an open-loop trace."""
+    def run(mode):
+        be = SimBackend(SIM_CFG, A100_80G,
+                        tokens_per_step=PROF.tokens_per_step_bd32,
+                        decode_mode="ar" if variant == "ar" else "elastic",
+                        obs=variant == "obs", seed=11, include_prefill=True,
+                        prefill_mode=mode, prefill_token_budget=64)
+        reqs = list(PoissonWorkload(PROF, rate=16.0, n_requests=20, seed=11,
+                                    max_prompt=256, max_output=64))
+        return _run(be, reqs, chunk=1 if variant == "ar" else 8,
+                    max_batch=64)
+
+    rep_w, out_w = run("wave")
+    rep_c, out_c = run("chunked")
+    assert len(rep_w.metrics) == len(rep_c.metrics) == 20
+    assert out_c == out_w
+
+
+def test_sim_trajectory_independent_of_batch_mix():
+    """The per-request streams behind the equivalence guarantee: a request
+    served alone commits the same tokens as in a batch."""
+    def solo(req):
+        be = SimBackend(SIM_CFG, A100_80G, seed=5, include_prefill=False)
+        _, outs = _run(be, [req], max_batch=1)
+        return outs[req.rid]
+
+    reqs = list(PoissonWorkload(PROF, 8.0, 5, seed=5, max_prompt=64,
+                                max_output=48))
+    be = SimBackend(SIM_CFG, A100_80G, seed=5, include_prefill=False)
+    _, batched = _run(be, reqs, max_batch=8)
+    for r in PoissonWorkload(PROF, 8.0, 5, seed=5, max_prompt=64,
+                             max_output=48):
+        assert batched[r.rid] == solo(r)
+
+
+# ---------------------------------------------------------------------------
+# prefill scheduler: budget never exceeded, head never starved
+# ---------------------------------------------------------------------------
+
+def test_prefill_scheduler_budget_and_no_starvation():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(st.lists(st.integers(1, 300), min_size=1, max_size=12),
+           st.integers(1, 128), st.sampled_from([8, 16, 32]))
+    @settings(max_examples=120, deadline=None)
+    def prop(prompts, budget, align):
+        ps = PrefillScheduler(budget, align)
+        reqs = [Request(rid=i, arrival_time=0.0, prompt_len=p,
+                        max_new_tokens=4) for i, p in enumerate(prompts)]
+        for r in reqs:
+            ps.add(r)
+        ticks = 0
+        while ps.queue:
+            ticks += 1
+            assert ticks <= sum(prompts) + len(prompts), "stalled"
+            head = ps.queue[0].rid
+            head_before = ps.cursor[head]
+            plan = ps.plan()
+            # never exceeds the (align-clamped) per-tick token budget
+            assert sum(n for _, _, n in plan) <= ps.budget
+            for req, off, n in plan:
+                assert n > 0 and off == ps.cursor[req.rid]
+                end = off + n
+                # chunk ends are aligned except a prompt's final chunk
+                assert end == req.prompt_len or end % ps.align == 0
+                ps.advance(req.rid, n)
+            # no starvation: the queue head always makes progress
+            if head in ps.cursor:
+                assert ps.cursor[head] > head_before
+            elif plan:
+                assert plan[0][0].rid == head       # head completed
+        assert not ps.cursor
+        # FCFS: total ticks bounded by the aligned-chunk count
+        assert ticks <= sum(-(-p // ps.align) + 1 for p in prompts)
+
+    prop()
+
+
+def test_sim_backend_prefill_history_respects_budget():
+    be = SimBackend(SIM_CFG, A100_80G, seed=2, include_prefill=True,
+                    prefill_mode="chunked", prefill_token_budget=48)
+    reqs = list(PoissonWorkload(PROF, rate=32.0, n_requests=12, seed=2,
+                                max_prompt=256, max_output=32))
+    rep, _ = _run(be, reqs, chunk=8, max_batch=32)
+    assert len(rep.metrics) == 12
+    assert be.prefill_tokens_history                 # chunked work happened
+    assert max(be.prefill_tokens_history) <= be._prefill.budget
+    assert sum(be.prefill_tokens_history) == sum(r.prompt_len for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# TTFT bookkeeping under chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_sim_ttft_stamped_at_last_chunk_tick():
+    """With a prefill cursor, first_token_time moves to the tick the last
+    chunk completes — never admission time."""
+    be = SimBackend(SIM_CFG, A100_80G, seed=0, include_prefill=True,
+                    prefill_mode="chunked", prefill_token_budget=64)
+    core = EngineCore(be, FixedScheduler(8), max_batch=4)
+    req = Request(rid=0, arrival_time=0.0, prompt_len=160, max_new_tokens=16)
+    core.submit(req)
+    core.tick()                                      # 64 tokens prefilled
+    assert be._prefill.pending(0)
+    assert core._metrics[0].first_token_time < 0
+    core.tick()                                      # 128
+    assert be._prefill.pending(0)
+    assert core._metrics[0].first_token_time < 0
+    core.tick()                                      # 160 done + first decode
+    assert not be._prefill.pending(0)
+    m = core._metrics[0]
+    assert m.first_token_time == core.clock.now()    # stamped THIS tick
+    assert m.first_token_time > m.admit_time
+    core.drain()
+    assert core.report().metrics[0].n_tokens == 16
+
+
+@pytest.mark.parametrize("mode", ["wave", "chunked"])
+def test_model_ar_single_token_ttft(ar_model, mode):
+    """max_new_tokens=1 AR: the request finishes on its prefill-derived
+    token — the backend must surface that commit in StepInfo so TTFT is
+    stamped (regression: wave mode left first_token_time at -1)."""
+    model, params = ar_model
+    be = ModelBackend(model, params, n_slots=4, max_len=64,
+                      decode_mode="ar", prefill_mode=mode,
+                      prefill_token_budget=16)
+    reqs = _model_requests(3, seed=4, prompt=40, out=1)
+    rep, outs = _run(be, reqs, chunk=1, max_batch=4)
+    assert len(rep.metrics) == 3
+    for m in rep.metrics:
+        assert m.n_tokens == 1
+        assert m.first_token_time >= 0               # TTFT stamped
+        assert m.ttft >= 0
+    assert all(len(v) == 1 for v in outs.values())
+
+
+def test_mid_prefill_preemption_requeues_cursor():
+    """Preempting a request mid-prefill discards its cursor (re-admission
+    restarts at 0) and banks NO decode work, and the replayed request
+    commits identical tokens."""
+    def run(preempt_at):
+        be = SimBackend(SIM_CFG, A100_80G, seed=9, include_prefill=True,
+                        prefill_mode="chunked", prefill_token_budget=64)
+        core = EngineCore(be, FixedScheduler(8), max_batch=4)
+        a = Request(rid=0, arrival_time=0.0, prompt_len=32,
+                    max_new_tokens=16)
+        b = Request(rid=1, arrival_time=0.0, prompt_len=240,
+                    max_new_tokens=16)
+        core.submit_all([a, b])
+        outs = {}
+        orig = be.release
+
+        def spy(rid):
+            outs[rid] = be.state(rid).output_tokens
+            orig(rid)
+
+        be.release = spy
+        for _ in range(preempt_at):
+            core.tick()
+        if preempt_at:
+            assert be._prefill.pending(1)            # b still mid-prefill
+            assert core.preempt(1)
+            m = core._metrics[1]
+            assert m.computed_tokens == 0            # chunks NOT banked
+            assert m.decode_steps == 0
+            assert not be._prefill.pending(1)        # cursor discarded
+            assert 1 not in be._states
+        core.drain()
+        return core.report(), outs
+
+    rep_p, out_p = run(preempt_at=2)
+    rep_n, out_n = run(preempt_at=0)
+    assert rep_p.preemptions == 1
+    done = {m.rid: m for m in rep_p.metrics}
+    assert done[1].n_tokens == 16
+    assert done[1].preemptions == 1
+    assert out_p == out_n                            # replay identical
+
+
+# ---------------------------------------------------------------------------
+# host-transfer accounting: prefill ships [B] scalars and is counted
+# ---------------------------------------------------------------------------
+
+def test_prefill_host_transfer_counted_and_scalar(diff_model):
+    """A prefill-only tick adds exactly the 8·Bp conf/argmax scalar bytes
+    (fp32 + int32 per padded row) to host_transfer_bytes — prefill is no
+    longer invisible to the counter, and never ships [B, V] logits."""
+    model, params = diff_model
+    be = ModelBackend(model, params, n_slots=4, max_len=64,
+                      prefill_mode="chunked", prefill_token_budget=16)
+    req = _model_requests(1, seed=6, prompt=40, out=8)[0]
+    be.admit(req)
+    assert be.host_transfer_bytes == 0
+    _, infos = be.decode_step([req.rid], 8)          # prefill-only tick
+    assert be._prefill.pending(req.rid)
+    assert infos[req.rid].valid_len == 0
+    assert be.host_transfer_bytes == 8               # 2 × 4-byte scalars, B=1
+    assert be.host_transfer_bytes < CFG.vocab_size   # no [B, V] logits
+
+
+@pytest.mark.parametrize("mode", ["wave", "chunked"])
+def test_prefill_bytes_scale_with_rows_not_vocab(diff_model, mode):
+    model, params = diff_model
+    be = ModelBackend(model, params, n_slots=8, max_len=64,
+                      prefill_mode=mode, prefill_token_budget=256)
+    reqs = _model_requests(4, seed=7, prompt=16, out=8)
+    for r in reqs:
+        be.admit(r)
+    before = be.host_transfer_bytes
+    be.decode_step([r.rid for r in reqs], 8)
+    # one prefill dispatch (4 rows pad to 4) + one decode dispatch
+    prefill_bytes = 8 * 4
+    decode_bytes = 8 * 4 * 8                         # conf+tok × Bp × c
+    assert be.host_transfer_bytes - before == prefill_bytes + decode_bytes
