@@ -82,7 +82,13 @@ class KVAdmissionPolicy:
     def preemption_victims(self, core, req: Request) -> list[int]:
         """Smallest set of lower-priority active rids whose eviction frees
         enough pages to admit ``req`` (lowest priority, least progress
-        first).  Empty list ⇒ preemption cannot help on this replica."""
+        first).  Empty list ⇒ preemption cannot help on this replica.
+
+        Starvation guard: requests already evicted ``core.preemption_cap``
+        times are never picked again by *cluster-tier* preemption — the
+        preemptor spills back to the cluster queue instead (unlike the
+        engine's memory preemption, nothing here requires eviction for
+        safety, so the guard has no waiver)."""
         kv = getattr(core.backend, "kv", None)
         if kv is None:
             return []
@@ -98,8 +104,12 @@ class KVAdmissionPolicy:
             except KeyError:
                 return 0
 
+        cap = getattr(core, "preemption_cap", None)
+        count = getattr(core, "preemption_count", lambda rid: 0)
         candidates = sorted(
-            (r for r in core.active_requests() if r.priority < req.priority),
+            (r for r in core.active_requests()
+             if r.priority < req.priority
+             and (cap is None or count(r.rid) < cap)),
             key=lambda r: (r.priority, progress(r)))
         victims, freed = [], 0
         for r in candidates:

@@ -22,6 +22,7 @@ from repro.cluster.admission import KVAdmissionPolicy, fits_ever
 from repro.serving.engine import EngineCore
 from repro.serving.metrics import ClusterReport
 from repro.serving.request import Request
+from repro.serving.telemetry import NULL_TRACER
 
 
 @dataclass
@@ -31,11 +32,14 @@ class ClusterEngine:
     admission: KVAdmissionPolicy = field(default_factory=KVAdmissionPolicy)
     enable_preemption: bool = False
     max_events: int = 50_000_000
+    tracer: object = None               # shared with the replica cores
 
     def __post_init__(self):
         n = len(self.replicas)
         if n == 0:
             raise ValueError("cluster needs at least one replica")
+        if self.tracer is None:
+            self.tracer = NULL_TRACER
         self.route_counts = [0] * n
         self.spill_events = 0
         self._spill: list[Request] = []
@@ -99,12 +103,16 @@ class ClusterEngine:
             core = self.replicas[idx]
             if self.admission.admissible(core, req):
                 core.submit(req)
-                self._mark_placed(idx)
+                self._mark_placed(idx, req)
                 return True
         return False
 
-    def _mark_placed(self, idx: int):
+    def _mark_placed(self, idx: int, req: Request, forced: bool = False):
         self.route_counts[idx] += 1
+        core = self.replicas[idx]
+        self.tracer.req("route", req.rid,
+                        max(req.arrival_time, core.clock.now()),
+                        idx, forced=forced)
         placed = getattr(self.router, "placed", None)
         if placed is not None:
             placed(idx, len(self.replicas))
@@ -112,6 +120,9 @@ class ClusterEngine:
     def _dispatch(self, req: Request):
         if not any(fits_ever(r, req) for r in self.replicas):
             self.rejected.append(req)     # would queue forever: refuse early
+            self.tracer.req("reject", req.rid, req.arrival_time, 0,
+                            prompt_len=req.prompt_len,
+                            max_new_tokens=req.max_new_tokens)
             return
         if self._place(req):
             return
@@ -119,6 +130,8 @@ class ClusterEngine:
             return
         self._spill.append(req)
         self.spill_events += 1
+        self.tracer.req("spill", req.rid, req.arrival_time, 0,
+                        queue_len=len(self._spill))
 
     def _try_preempt(self, req: Request) -> bool:
         for idx in self.router.rank(self.replicas, req):
@@ -126,12 +139,12 @@ class ClusterEngine:
             victims = self.admission.preemption_victims(core, req)
             if victims:
                 for rid in victims:
-                    core.preempt(rid)
+                    core.preempt(rid, reason="cluster")
                 # the preemptor's higher priority queues it ahead of the
                 # victims it just evicted (EngineCore orders admission by
                 # (-priority, arrival)), so the freed pages are its
                 core.submit(req)
-                self._mark_placed(idx)
+                self._mark_placed(idx, req)
                 return True
         return False
 
@@ -150,4 +163,4 @@ class ClusterEngine:
         idx = max(range(len(self.replicas)),
                   key=lambda i: (free_pages(self.replicas[i]), -i))
         self.replicas[idx].submit(req)
-        self._mark_placed(idx)
+        self._mark_placed(idx, req, forced=True)

@@ -33,7 +33,8 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                       preemption: bool = False,
                       kv_admission: str = "incremental",
                       prefill_mode: str = "wave",
-                      prefill_token_budget: int | None = None
+                      prefill_token_budget: int | None = None,
+                      tracer=None
                       ) -> ClusterEngine:
     """N independent SimBackend+scheduler replicas (per-replica RNG seeds,
     per-replica TU estimator state) under one ClusterEngine.  ``router``
@@ -54,11 +55,13 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                         prefill_mode=prefill_mode,
                         prefill_token_budget=prefill_token_budget)
         sch = make_replica_scheduler(be, profile, mode)
-        replicas.append(EngineCore(be, sch, max_batch=max_batch))
+        core = EngineCore(be, sch, max_batch=max_batch, tracer=tracer)
+        core.replica = i
+        replicas.append(core)
     return ClusterEngine(replicas, router,
                          admission=KVAdmissionPolicy(
                              low_watermark=kv_watermark),
-                         enable_preemption=preemption)
+                         enable_preemption=preemption, tracer=tracer)
 
 
 def build_model_cluster(model, params, n_replicas: int, router, *, profile,
@@ -69,7 +72,8 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
                         kv_watermark: float = 0.05,
                         preemption: bool = False,
                         prefill_mode: str = "chunked",
-                        prefill_token_budget: int | None = None
+                        prefill_token_budget: int | None = None,
+                        tracer=None
                         ) -> ClusterEngine:
     """N real-model replicas (shared params, per-replica KV pool) under one
     ClusterEngine.  Attention-only families serve paged, so every replica
@@ -79,7 +83,7 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
     if isinstance(router, str):
         router = make_router(router)
     replicas = []
-    for _ in range(n_replicas):
+    for i in range(n_replicas):
         be = ModelBackend(model, params, n_slots=n_slots, max_len=max_len,
                           decode_mode="ar" if mode == "ar" else "elastic",
                           kv_pages=kv_pages, page_size=page_size,
@@ -91,8 +95,10 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
             batches=(1, 2, 4, 8, 16), ctx=float(max_len)) \
             if mode == "elastic" else scheduler_for_mode(
                 mode, prior_tokens_per_step=profile.tokens_per_step_bd32)
-        replicas.append(EngineCore(be, sch, max_batch=max_batch))
+        core = EngineCore(be, sch, max_batch=max_batch, tracer=tracer)
+        core.replica = i
+        replicas.append(core)
     return ClusterEngine(replicas, router,
                          admission=KVAdmissionPolicy(
                              low_watermark=kv_watermark),
-                         enable_preemption=preemption)
+                         enable_preemption=preemption, tracer=tracer)

@@ -47,6 +47,13 @@ class ElasticScheduler:
     memory_hi: float = 1.0
     _current: int = field(default=0, init=False)
     history: list = field(default_factory=list, init=False)
+    # Decision log for telemetry: every ``select`` records its inputs AND
+    # the internal state that chose the output (per-candidate TU estimates,
+    # hysteresis incumbent, memory cap) — enough for
+    # ``repro.serving.telemetry.replay_select`` to re-run the decision from
+    # the log and get the same chunk.  Rebuilt each call; a small dict, so
+    # the untraced path pays ~nothing relative to the candidate scoring.
+    last_decision: dict | None = field(default=None, init=False)
 
     def __post_init__(self):
         self._current = max(self.candidates)
@@ -81,14 +88,35 @@ class ElasticScheduler:
         (optionally) the KV allocator's utilization in [0, 1], and the
         prompt tokens of chunked-prefill work sharing the tick."""
         if b <= 0:
-            return max(self.candidates)
+            best = max(self.candidates)
+            self.last_decision = {
+                "policy": "elastic", "b": b, "kv_util": kv_util,
+                "prefill_tokens": prefill_tokens,
+                "candidates": list(self.candidates), "cap": None,
+                "cur": self._current, "held": False, "tu": {},
+                "scores": {}, "chunk": best}
+            return best
         cap = self.memory_cap(kv_util)
-        scores = {c: self.score(c, b, prefill_tokens)
-                  for c in self.candidates if c <= cap}
+        tu, scores = {}, {}
+        for c in self.candidates:
+            if c > cap:
+                continue
+            n = self.tu_estimator.estimate(c)
+            tu[c] = n
+            scores[c] = n * b / self.latency_model.predict_bc(
+                b * c + prefill_tokens)
         best = max(scores, key=scores.get)
         cur = self._current
-        if cur in scores and scores[best] <= (1 + self.hysteresis) * scores[cur]:
+        held = cur in scores and \
+            scores[best] <= (1 + self.hysteresis) * scores[cur]
+        if held:
             best = cur
+        self.last_decision = {
+            "policy": "elastic", "b": b, "kv_util": kv_util,
+            "prefill_tokens": prefill_tokens,
+            "candidates": list(self.candidates), "cap": cap, "cur": cur,
+            "held": bool(held), "hysteresis": self.hysteresis,
+            "tu": tu, "scores": scores, "chunk": best}
         self._current = best
         self.history.append((b, best))
         return best
@@ -128,9 +156,13 @@ class FixedScheduler:
     """Baseline: fixed chunk/block size (BD-<c> or AR when c == 1)."""
     chunk: int
     history: list = field(default_factory=list, init=False)
+    last_decision: dict | None = field(default=None, init=False)
 
     def select(self, b: int, kv_util: float | None = None,
                prefill_tokens: int = 0) -> int:
+        self.last_decision = {"policy": "fixed", "b": b, "kv_util": kv_util,
+                              "prefill_tokens": prefill_tokens,
+                              "chunk": self.chunk}
         self.history.append((b, self.chunk))
         return self.chunk
 

@@ -19,7 +19,8 @@ from repro.core.latency_model import DEVICES
 from repro.core.scheduler import ElasticScheduler, scheduler_for_mode
 from repro.models.registry import build_model
 from repro.serving import (DATASETS, ModelBackend, PoissonWorkload,
-                           ServingEngine, SimBackend, chunk_distribution)
+                           ServingEngine, SimBackend, Tracer,
+                           chunk_distribution)
 
 
 def make_scheduler(mode: str, backend, profile):
@@ -58,6 +59,10 @@ def main():
     ap.add_argument("--prefill-budget", type=int, default=None,
                     help="max prompt tokens prefetched per engine tick "
                          "(default: 4 aligned chunks)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the telemetry timeline to PATH (JSONL) "
+                         "and PATH's stem + .perfetto.json (Chrome "
+                         "trace_event JSON for ui.perfetto.dev)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -106,8 +111,14 @@ def main():
         else:
             sched = make_scheduler(args.mode, None, profile)
 
-    engine = ServingEngine(backend, sched, max_batch=args.max_batch)
+    tracer = Tracer() if args.trace else None
+    engine = ServingEngine(backend, sched, max_batch=args.max_batch,
+                           tracer=tracer)
     report = engine.run(list(wl))
+    if tracer is not None:
+        jsonl, perfetto = tracer.export(args.trace)
+        print(f"trace: {len(tracer.events)} events "
+              f"({tracer.dropped} dropped) -> {jsonl}, {perfetto}")
     print(f"requests: {len(report.metrics)}")
     print(f"decode throughput: {report.throughput:.1f} tok/s")
     print(f"P50/P90/P99 TPOT: {report.tpot_percentile(50)*1e3:.1f} / "

@@ -4,10 +4,13 @@
         --replicas 4 --router saturation --dataset sharegpt \\
         --rate 8.0 --requests 200
 
-Serves one open-loop trace (poisson | bursty | diurnal) across N replica
+Serves one open-loop workload (poisson | bursty | diurnal) across N replica
 engines through a pluggable router with KV-pressure admission (and optional
 low-priority preemption), then prints cluster goodput, per-replica
-utilization, and tail latency.
+utilization, and tail latency.  ``--trace <path>`` records the full
+telemetry timeline (tick events, scheduler decisions, request lifecycle)
+to a JSONL event log plus a Perfetto-loadable ``.perfetto.json`` — inspect
+with ``python -m repro.launch.trace_view <path>``.
 """
 
 from __future__ import annotations
@@ -17,18 +20,18 @@ import argparse
 from repro.cluster import build_sim_cluster
 from repro.configs import get_config
 from repro.core.latency_model import DEVICES
-from repro.serving import DATASETS, make_trace
+from repro.serving import DATASETS, Tracer, make_trace
 
 
-def run_cluster(args, profile):
+def run_cluster(args, profile, tracer=None):
     cluster = build_sim_cluster(
         get_config(args.arch), profile, args.replicas, args.router,
         device=DEVICES[args.device], mode=args.mode,
         kv_pages=args.kv_pages, max_batch=args.max_batch, seed=args.seed,
         kv_watermark=args.kv_watermark, preemption=args.preemption,
         kv_admission=args.kv_admission, prefill_mode=args.prefill_mode,
-        prefill_token_budget=args.prefill_budget)
-    wl = list(make_trace(profile, args.trace, args.rate, args.requests,
+        prefill_token_budget=args.prefill_budget, tracer=tracer)
+    wl = list(make_trace(profile, args.workload, args.rate, args.requests,
                          seed=args.seed))
     frac = args.high_priority_frac
     if frac is None:
@@ -50,8 +53,13 @@ def main():
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--router", default="saturation",
                     help="round_robin | jsq | saturation")
-    ap.add_argument("--trace", default="poisson",
-                    choices=["poisson", "bursty", "diurnal"])
+    ap.add_argument("--workload", default="poisson",
+                    choices=["poisson", "bursty", "diurnal"],
+                    help="open-loop arrival process shape")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the telemetry timeline to PATH (JSONL) "
+                         "and PATH's stem + .perfetto.json (Chrome "
+                         "trace_event JSON for ui.perfetto.dev)")
     ap.add_argument("--rate", type=float, default=8.0,
                     help="cluster-wide request rate (req/s)")
     ap.add_argument("--requests", type=int, default=200)
@@ -83,11 +91,12 @@ def main():
     args = ap.parse_args()
 
     profile = DATASETS[args.dataset]
-    rep = run_cluster(args, profile)
+    tracer = Tracer() if args.trace else None
+    rep = run_cluster(args, profile, tracer=tracer)
     slo = args.slo_tpot_ms * 1e-3
 
     print(f"replicas: {args.replicas}  router: {args.router}  "
-          f"trace: {args.trace}  rate: {args.rate} req/s")
+          f"workload: {args.workload}  rate: {args.rate} req/s")
     print(f"requests completed: {len(rep.metrics)}")
     print(f"cluster throughput: {rep.throughput:.1f} tok/s")
     print(f"cluster goodput (TPOT<= {args.slo_tpot_ms:.0f}ms): "
@@ -105,6 +114,17 @@ def main():
     print(f"spill-backs: {rep.spills}  preemptions: {rep.preemptions}  "
           f"rejected (never fit): {len(rep.rejected)}")
     print(f"token utilization: {rep.token_utilization:.3f}")
+    if rep.preemptions:
+        pi = rep.preemption_impact()
+        print(f"preemption SLO impact: {pi['n_preempted']} requests "
+              f"preempted (max {pi['max_preemptions_per_request']}×/req), "
+              f"P90 TPOT {pi['preempted_tpot_p']*1e3:.1f} ms vs "
+              f"{pi['clean_tpot_p']*1e3:.1f} ms clean "
+              f"({pi['tpot_penalty']:.2f}x)")
+    if tracer is not None:
+        jsonl, perfetto = tracer.export(args.trace)
+        print(f"trace: {len(tracer.events)} events "
+              f"({tracer.dropped} dropped) -> {jsonl}, {perfetto}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,9 @@ from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
 from repro.serving.metrics import (ClusterReport, chunk_distribution,
                                    slo_capacity)
 from repro.serving.request import Request, RequestMetrics
+from repro.serving.telemetry import (NULL_TRACER, NullTracer, Tracer,
+                                     load_jsonl, replay_select,
+                                     validate_trace_events)
 from repro.serving.workload import (DATASETS, CommitSimulator, DatasetProfile,
                                     PoissonWorkload, RateVaryingWorkload,
                                     bursty_rate, diurnal_rate,
@@ -19,4 +22,6 @@ __all__ = [
     "Request", "RequestMetrics", "DATASETS", "CommitSimulator",
     "DatasetProfile", "PoissonWorkload", "RateVaryingWorkload", "bursty_rate",
     "diurnal_rate", "fixed_batch_workload", "make_trace",
+    "NULL_TRACER", "NullTracer", "Tracer", "load_jsonl", "replay_select",
+    "validate_trace_events",
 ]

@@ -315,6 +315,14 @@ class SimBackend:
         self._states: dict[int, object] = {}
         self._seed = seed
         self._req_rng: dict[int, np.random.Generator] = {}
+        # telemetry: dispatch/byte counters mirror the real backend's — one
+        # fused dispatch per tick with decode work, one standalone forward
+        # for a prefill-only tick, and the 2·B·c conf/token scalars (16
+        # bytes per window slot) the fused step returns to the host
+        self.decode_dispatches = 0
+        self.prefill_dispatches = 0
+        self.host_transfer_bytes = 0
+        self.last_prefill_plan: list[tuple[int, int, int]] = []
 
     def _rng_of(self, rid: int) -> np.random.Generator:
         rng = self._req_rng.get(rid)
@@ -396,6 +404,15 @@ class SimBackend:
             return len(rids)
         return sum(1 for r in rids if not self._prefill.pending(r))
 
+    def telemetry_counters(self) -> dict:
+        """Cumulative counters the tracer samples once per tick."""
+        return {"decode_dispatches": self.decode_dispatches,
+                "prefill_dispatches": self.prefill_dispatches,
+                "host_transfer_bytes": self.host_transfer_bytes,
+                "prefill_backlog": self._prefill.backlog,
+                "prefill_tick_tokens": self.last_prefill_plan
+                and sum(n for _, _, n in self.last_prefill_plan) or 0}
+
     def _prefill_phase(self) -> tuple[int, float]:
         """Advance this tick's prefill chunks (FCFS, budget-bounded);
         returns (tokens, token-weighted mean context) for the tick's fused
@@ -403,6 +420,7 @@ class SimBackend:
         — weights stream once per tick — so their cost is the marginal
         ``b·c`` workload they add, not a standalone per-chunk forward
         (which would re-pay the weight-read floor once per chunk)."""
+        self.last_prefill_plan = []
         if not self._prefill.queue:
             return 0, 0.0
         plan = self._prefill.plan()
@@ -411,6 +429,8 @@ class SimBackend:
         for req, off, n in plan:
             self._prefill.advance(req.rid, n)
         self.prefill_tokens_history.append(tokens)
+        self.last_prefill_plan = [(req.rid, off, n) for req, off, n in plan]
+        self.host_transfer_bytes += 16 * len(plan)  # [B] conf/argmax scalars
         return tokens, ctx
 
     # ------------------------------------------------------------------
@@ -498,10 +518,15 @@ class SimBackend:
                 infos[rid] = StepInfo(0, np.zeros(1, bool), 0, False)
         if not decode_rids:
             # prefill-only tick: one batched chunk forward
+            self.prefill_dispatches += 1
             return self.analytic.step_latency(1, pf_tokens, pf_ctx), infos
         b = max(1, len(decode_rids))
         c_eff = max(1, int(round(float(np.mean(eff_chunks)))) if eff_chunks
                     else 1)
+        # one fused dispatch per decode tick (prefill chunks ride it);
+        # host pulls the 2·[B, c] conf/token scalars back
+        self.decode_dispatches += 1
+        self.host_transfer_bytes += 16 * b * c_eff
         ctx = float(np.mean(ctxs)) if ctxs else 1.0
         if pf_tokens:
             # fused tick: prefill chunks ride the decode dispatch — charge
@@ -590,6 +615,7 @@ class ModelBackend:
         self.prefill_dispatches = 0      # jit dispatches issued by prefill
         self.host_transfer_bytes = 0     # device→host bytes pulled by decode
         self.prefill_tokens_history: list[int] = []  # prompt tokens per tick
+        self.last_prefill_plan: list[tuple[int, int, int]] = []
 
         if self.paged:
             model._check_paged()
@@ -877,6 +903,7 @@ class ModelBackend:
                 st.commit(int(tok[i]))
                 fresh.add(r.rid)
         self.prefill_tokens_history.append(sum(r.prompt_len for r in reqs))
+        self.last_prefill_plan = [(r.rid, 0, r.prompt_len) for r in reqs]
         return fresh
 
     def _chunked_prefill_tick(self) -> set:
@@ -919,14 +946,27 @@ class ModelBackend:
                     st.commit(int(tok[i]))
                     fresh.add(req.rid)
         self.prefill_tokens_history.append(sum(n for _, _, n in plan))
+        self.last_prefill_plan = [(req.rid, off, n) for req, off, n in plan]
         return fresh
 
     def _prefill_tick(self) -> set:
+        self.last_prefill_plan = []
         if not self._prefill.queue:
             return set()
         if self.prefill_mode == "wave":
             return self._flush_prefills()
         return self._chunked_prefill_tick()
+
+    def telemetry_counters(self) -> dict:
+        """Cumulative counters the tracer samples once per tick."""
+        out = {"decode_dispatches": self.decode_dispatches,
+               "prefill_dispatches": self.prefill_dispatches,
+               "host_transfer_bytes": self.host_transfer_bytes}
+        if self.paged:
+            out["prefill_backlog"] = self._prefill.backlog
+            out["prefill_tick_tokens"] = self.last_prefill_plan \
+                and sum(n for _, _, n in self.last_prefill_plan) or 0
+        return out
 
     def _dispatch_window(self, rids, win, start, valid, n_adv):
         """Run one paged decode dispatch for an assembled window batch.

@@ -29,6 +29,7 @@ import numpy as np
 from repro.serving.clock import VirtualClock
 from repro.serving.kv_pool import OutOfPages
 from repro.serving.request import Request, RequestMetrics
+from repro.serving.telemetry import NULL_TRACER
 
 
 @dataclass
@@ -79,12 +80,24 @@ class EngineCore:
     """
 
     def __init__(self, backend, scheduler, *, max_batch: int = 256,
-                 clock=None, max_steps: int = 2_000_000):
+                 clock=None, max_steps: int = 2_000_000, tracer=None,
+                 preemption_cap: int = 8):
         self.backend = backend
         self.scheduler = scheduler
         self.max_batch = max_batch
         self.clock = clock if clock is not None else VirtualClock()
         self.max_steps = max_steps
+        # Telemetry: the null tracer is a no-op *object*, so the hot loop
+        # calls tracer.tick()/tracer.req() unconditionally — no scattered
+        # `if tracing:` branches (see repro.serving.telemetry).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.replica = 0            # cluster factories stamp the index
+        # Starvation guard: victim selection skips requests that already
+        # ate ``preemption_cap`` evictions (each eviction discards all
+        # decode progress — unbounded re-eviction can livelock a request).
+        # Memory safety still wins: when EVERY candidate is at the cap the
+        # guard yields rather than let the pool wedge.
+        self.preemption_cap = preemption_cap
         # _pending is kept sorted DESCENDING by (-priority, arrival_time) so
         # that pop() yields the highest-priority, earliest arrival (FIFO
         # among equals).  With uniform priorities this is plain
@@ -106,6 +119,7 @@ class EngineCore:
         self._first_decode_t = None
         self._steps = 0
         self._busy = 0.0
+        self._max_itl = 0.0         # running stall gauge for the tracer
         self.preemptions = 0
 
     # -- queue introspection (used by routers / admission policies) -------
@@ -169,6 +183,9 @@ class EngineCore:
 
     def submit(self, req: Request):
         """Enqueue one request (binary insert, FIFO among equal keys)."""
+        if req.rid not in self._metrics:    # first sighting, not a requeue
+            self.tracer.req("submit", req.rid, req.arrival_time,
+                            self.replica)
         p = self._pending
         key = self._queue_key(req)
         lo, hi = 0, len(p)
@@ -190,6 +207,9 @@ class EngineCore:
                 sorted(requests, key=self._queue_key)))
             for r in self._pending:
                 self._arrival_track(r.arrival_time)
+                if r.rid not in self._metrics:
+                    self.tracer.req("submit", r.rid, r.arrival_time,
+                                    self.replica)
         else:
             for r in requests:
                 self.submit(r)
@@ -249,6 +269,9 @@ class EngineCore:
                 m = RequestMetrics(req.rid, req.arrival_time)
                 self._metrics[req.rid] = m
             m.admit_time = now
+            self.tracer.req("admit", req.rid, now, self.replica,
+                            wait=now - req.arrival_time,
+                            n_preempts=m.preemptions)
             prefill_lat = self.backend.admit(req)
             self.clock.advance(prefill_lat)
             self._busy += prefill_lat
@@ -262,6 +285,7 @@ class EngineCore:
                 # completes.
                 m.first_token_time = now
                 m.last_token_time = now
+                self.tracer.req("first_token", req.rid, now, self.replica)
             self._active.append(req)
 
     # -- memory preemption (OutOfPages pressure relief) --------------------
@@ -276,12 +300,21 @@ class EngineCore:
         kv = getattr(self.backend, "kv", None)
         return kv.utilization if kv is not None else None
 
+    def preemption_count(self, rid: int) -> int:
+        """Evictions this request has already suffered (0 if unknown) —
+        read by the starvation guard and the cluster admission policy."""
+        m = self._metrics.get(rid)
+        return m.preemptions if m is not None else 0
+
     def _memory_victim(self) -> Request | None:
         """Victim for memory preemption: lowest priority first, then most
         remaining work (losing the least decode progress per page freed),
         then latest arrival.  Never the last active request — a lone
         request always fits (admission checks the full footprint against
-        the whole pool)."""
+        the whole pool).  Requests already at ``preemption_cap`` evictions
+        are skipped while any under-cap candidate exists (starvation
+        guard); if the whole batch is at the cap, memory safety wins and
+        the guard is waived."""
         if len(self._active) <= 1:
             return None
 
@@ -292,13 +325,17 @@ class EngineCore:
                 done = 0
             return req.max_new_tokens - done
 
-        return min(self._active,
+        pool = [r for r in self._active
+                if self.preemption_count(r.rid) < self.preemption_cap] \
+            or self._active
+        return min(pool,
                    key=lambda r: (r.priority, -remaining(r),
                                   -r.arrival_time, -r.rid))
 
     def _preempt_for_memory(self) -> bool:
         victim = self._memory_victim()
-        return victim is not None and self.preempt(victim.rid)
+        return victim is not None and self.preempt(victim.rid,
+                                                   reason="memory")
 
     def _ensure_step_capacity(self, chunk: int):
         """Preempt until the batch's worst-case page growth for the next
@@ -360,18 +397,24 @@ class EngineCore:
 
         commit_masks, valids = [], []
         still_active = []
+        commits = 0
         for req in self._active:
             info = infos[req.rid]
             m = self._metrics[req.rid]
             if info.n_committed > 0:
+                commits += info.n_committed
                 # first_token_time lands the tick the commit happened — for
                 # chunked prefill that is the tick the LAST prompt chunk
                 # completed (the backend surfaces the prefill-derived AR
                 # token in that tick's StepInfo), not admission time
                 if m.first_token_time < 0:
                     m.first_token_time = now
+                    self.tracer.req("first_token", req.rid, now,
+                                    self.replica)
                 else:
-                    m.max_itl = max(m.max_itl, now - m.last_token_time)
+                    itl = now - m.last_token_time
+                    m.max_itl = max(m.max_itl, itl)
+                    self._max_itl = max(self._max_itl, itl)
                 m.last_token_time = now
             if info.valid_len > 0:
                 commit_masks.append(info.commit_mask)
@@ -385,13 +428,17 @@ class EngineCore:
                 m.decode_steps += st.steps
                 self._done.append(m)
                 self.backend.release(req.rid)
+                self.tracer.req("finish", req.rid, now, self.replica,
+                                n_tokens=m.n_tokens,
+                                preemptions=m.preemptions)
             else:
                 still_active.append(req)
         self._active = still_active
         self.scheduler.observe(commit_masks, valids)
+        self.tracer.tick(self, now - latency, latency, b, chunk, commits)
 
     # -- preemption (cluster or memory KV-pressure relief) -----------------
-    def preempt(self, rid: int) -> bool:
+    def preempt(self, rid: int, reason: str = "cluster") -> bool:
         """Evict an active request: release its backend state (freeing its
         KV pages) and requeue it for re-admission — it re-prefills from
         scratch, losing decode progress (Fan et al.'s evict+recompute).
@@ -412,6 +459,18 @@ class EngineCore:
                 m.computed_tokens += st.computed_tokens
                 m.decode_steps += st.steps
                 m.preemptions += 1
+                kv = getattr(self.backend, "kv", None)
+                pages = 0
+                if kv is not None:
+                    try:
+                        pages = kv.table_len(rid)
+                    except KeyError:
+                        pages = 0
+                self.tracer.req("preempt", rid, self.clock.now(),
+                                self.replica, reason=reason,
+                                pages_freed=pages,
+                                n_committed=st.n_committed,
+                                preemptions=m.preemptions)
                 self.backend.release(rid)
                 self.preemptions += 1
                 self.submit(req)
@@ -435,17 +494,18 @@ class ServingEngine:
     thin wrapper over :class:`EngineCore`."""
 
     def __init__(self, backend, scheduler, *, max_batch: int = 256,
-                 clock=None, max_steps: int = 2_000_000):
+                 clock=None, max_steps: int = 2_000_000, tracer=None):
         self.backend = backend
         self.scheduler = scheduler
         self.max_batch = max_batch
         self.clock = clock if clock is not None else VirtualClock()
         self.max_steps = max_steps
+        self.tracer = tracer
 
     def run(self, requests) -> EngineReport:
         core = EngineCore(self.backend, self.scheduler,
                           max_batch=self.max_batch, clock=self.clock,
-                          max_steps=self.max_steps)
+                          max_steps=self.max_steps, tracer=self.tracer)
         core.submit_all(requests)
         core.drain()
         return core.report()

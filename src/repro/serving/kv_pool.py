@@ -125,6 +125,16 @@ class PagedKVAllocator:
     def utilization(self) -> float:
         return 1.0 - len(self._free) / self.n_pages
 
+    def gauges(self) -> dict:
+        """Telemetry gauge snapshot (the tracer samples this once per tick
+        — the allocator deliberately emits no per-alloc/extend/trim events,
+        which would swamp the ring buffer at page granularity)."""
+        free = len(self._free)
+        return {"n_pages": self.n_pages, "free_pages": free,
+                "pages_in_use": self.n_pages - free,
+                "n_requests": len(self._tables),
+                "utilization": 1.0 - free / self.n_pages}
+
     # ------------------------------------------------------------------
     # Device-side page pool (real-model backends)
     # ------------------------------------------------------------------

@@ -11,8 +11,12 @@ import numpy as np
 def slo_capacity(run_at_rate, rates, slo_tpot: float, percentile: float = 90.0):
     """Max request rate whose P<percentile> TPOT meets the SLO (paper §7.4).
 
-    ``run_at_rate(rate) -> EngineReport``.  Returns (capacity, curve) where
-    curve = [(rate, p_tpot), ...] for plotting Fig. 10-style results.
+    ``run_at_rate(rate) -> EngineReport``.  Returns ``(capacity, curve)``
+    where ``curve = [(rate, p_tpot, throughput), ...]`` — one 3-tuple per
+    probed rate, carrying the report's output-token throughput alongside
+    the latency percentile so Fig. 10-style capacity plots and
+    throughput-vs-rate plots come from one sweep (shape pinned by
+    ``tests/test_metrics_report.py``).
     """
     curve = []
     capacity = 0.0
@@ -91,6 +95,28 @@ class ClusterReport:
     def ttft_percentile(self, q: float = 90.0) -> float:
         vals = [m.ttft for m in self.metrics if m.first_token_time >= 0]
         return float(np.percentile(vals, q)) if vals else float("nan")
+
+    def preemption_impact(self, q: float = 90.0) -> dict:
+        """SLO impact of eviction+recompute: TPOT percentile of requests
+        that were preempted at least once vs never-preempted ("clean")
+        requests, the penalty ratio between them, and the worst per-request
+        eviction count (bounded by the engine's starvation guard)."""
+        finished = [m for m in self.metrics if m.n_tokens > 0]
+        pre = [m.tpot for m in finished if m.preemptions > 0]
+        clean = [m.tpot for m in finished if m.preemptions == 0]
+        p_pre = float(np.percentile(pre, q)) if pre else float("nan")
+        p_clean = float(np.percentile(clean, q)) if clean else float("nan")
+        return {
+            "n_preempted": len(pre),
+            "n_clean": len(clean),
+            "total_preemptions": self.preemptions,
+            "max_preemptions_per_request": max(
+                (m.preemptions for m in self.metrics), default=0),
+            "preempted_tpot_p": p_pre,
+            "clean_tpot_p": p_clean,
+            "tpot_penalty": p_pre / p_clean
+            if pre and clean and p_clean > 0 else float("nan"),
+        }
 
 
 def chunk_distribution(report):

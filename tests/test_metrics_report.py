@@ -1,0 +1,125 @@
+"""Metrics-layer tests: the ``slo_capacity`` curve shape (pinning the
+documented 3-tuple API), ``ClusterReport`` edge cases, and the preemption
+SLO-impact summary."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving import ClusterReport, RequestMetrics, slo_capacity
+from repro.serving.engine import EngineReport
+
+
+def _metric(rid, first=1.0, finish=2.0, n_tokens=11, preemptions=0,
+            arrival=0.0):
+    return RequestMetrics(rid=rid, arrival_time=arrival, admit_time=arrival,
+                          first_token_time=first, finish_time=finish,
+                          n_tokens=n_tokens, computed_tokens=n_tokens * 3,
+                          decode_steps=5, preemptions=preemptions)
+
+
+def _engine_report(metrics, total_time=10.0, preemptions=0):
+    total = sum(m.n_tokens for m in metrics)
+    computed = sum(m.computed_tokens for m in metrics)
+    return EngineReport(metrics, [], [], total_time, total_time, total,
+                        computed, busy_time=total_time,
+                        preemptions=preemptions)
+
+
+# ---------------------------------------------------------------------------
+# slo_capacity: the curve carries (rate, p_tpot, throughput) 3-tuples
+# ---------------------------------------------------------------------------
+
+def test_slo_capacity_curve_is_rate_ptpot_throughput_triples():
+    reports = {
+        1.0: _engine_report([_metric(0, first=0.0, finish=1.0)]),   # 100ms
+        2.0: _engine_report([_metric(1, first=0.0, finish=3.0)]),   # 300ms
+    }
+    cap, curve = slo_capacity(lambda r: reports[r], [1.0, 2.0],
+                              slo_tpot=0.200)
+    assert cap == 1.0                       # only rate 1.0 meets the SLO
+    assert len(curve) == 2
+    for entry, rate in zip(curve, [1.0, 2.0]):
+        assert len(entry) == 3              # documented shape: 3-tuple
+        r, p, thr = entry
+        assert r == rate
+        assert p == pytest.approx(reports[rate].tpot_percentile(90.0))
+        assert thr == pytest.approx(reports[rate].throughput)
+
+
+# ---------------------------------------------------------------------------
+# ClusterReport edge cases
+# ---------------------------------------------------------------------------
+
+def test_cluster_report_empty_replica_reports():
+    rep = ClusterReport([])
+    assert rep.metrics == []
+    assert rep.makespan == 0.0
+    assert rep.total_tokens == 0
+    assert rep.computed_tokens == 0
+    assert rep.throughput == 0.0
+    assert rep.goodput(0.05) == 0.0
+    assert math.isnan(rep.slo_attainment(0.05))
+    assert math.isnan(rep.tpot_percentile())
+    assert math.isnan(rep.ttft_percentile())
+    assert rep.replica_utilization() == []
+
+
+def test_cluster_report_goodput_zero_finished():
+    # replicas exist but no request produced tokens
+    rep = ClusterReport([_engine_report([_metric(0, n_tokens=0)],
+                                        total_time=5.0)])
+    assert rep.goodput(0.05) == 0.0
+    assert math.isnan(rep.slo_attainment(0.05))
+    assert math.isnan(rep.tpot_percentile())
+
+
+def test_cluster_report_route_and_reject_aggregation():
+    r0 = _engine_report([_metric(0), _metric(1)], total_time=4.0)
+    r1 = _engine_report([_metric(2)], total_time=6.0)
+    rep = ClusterReport([r0, r1], spills=3, preemptions=2,
+                        route_counts=[2, 1], rejected=[7, 8])
+    assert rep.route_counts == [2, 1]
+    assert sum(rep.route_counts) == len(rep.metrics)
+    assert rep.rejected == [7, 8]
+    assert rep.spills == 3 and rep.preemptions == 2
+    assert rep.makespan == 6.0              # slowest replica, not the sum
+    assert rep.total_tokens == 33
+    assert rep.throughput == pytest.approx(33 / 6.0)
+    # utilization is against the cluster makespan
+    assert rep.replica_utilization() == pytest.approx([4 / 6, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# preemption SLO impact
+# ---------------------------------------------------------------------------
+
+def test_preemption_impact_separates_clean_and_preempted():
+    clean = [_metric(i, first=0.0, finish=1.0) for i in range(4)]   # 100ms
+    slow = [_metric(10 + i, first=0.0, finish=3.0, preemptions=2)
+            for i in range(2)]                                      # 300ms
+    rep = ClusterReport([_engine_report(clean + slow, preemptions=4)],
+                        preemptions=4)
+    pi = rep.preemption_impact(q=50.0)
+    assert pi["n_preempted"] == 2 and pi["n_clean"] == 4
+    assert pi["total_preemptions"] == 4
+    assert pi["max_preemptions_per_request"] == 2
+    assert pi["preempted_tpot_p"] == pytest.approx(0.3)
+    assert pi["clean_tpot_p"] == pytest.approx(0.1)
+    assert pi["tpot_penalty"] == pytest.approx(3.0)
+
+
+def test_preemption_impact_no_preemptions_is_nan_not_crash():
+    rep = ClusterReport([_engine_report([_metric(0)])])
+    pi = rep.preemption_impact()
+    assert pi["n_preempted"] == 0
+    assert math.isnan(pi["preempted_tpot_p"])
+    assert math.isnan(pi["tpot_penalty"])
+    assert pi["clean_tpot_p"] > 0
+
+
+def test_preemption_impact_empty_report():
+    pi = ClusterReport([]).preemption_impact()
+    assert pi["n_preempted"] == pi["n_clean"] == 0
+    assert math.isnan(pi["tpot_penalty"])
