@@ -530,7 +530,7 @@ def prefill_interleave(quick=False):
 
 
 def decode_step(quick=False):
-    """Fused donated decode step vs pre-fusion → BENCH_decode_step.json
+    """Fused donated decode step → BENCH_decode_step.json
     (see benchmarks/decode_step_bench)."""
     from benchmarks.decode_step_bench import run_bench
     payload = run_bench(quick=quick, verbose=False)
@@ -541,9 +541,23 @@ def decode_step(quick=False):
          f"{payload['donation_aliased']}")
     emit("decode_step.host_transfer_reduction",
          f"{s['host_transfer_reduction']:.0f}x",
-         "B*c*V logits -> 2*B*c scalars; full grid in BENCH_decode_step.json")
-    emit("decode_step.tokens_match", str(s["all_tokens_match"]).lower(),
-         "fused and pre-fusion commit bit-identical tokens")
+         "analytic 4*B*c*V logits bytes vs measured 2*B*c scalars; "
+         "full grid in BENCH_decode_step.json")
+
+
+def split_kv(quick=False):
+    """Sharded page pool / split-KV paged decode scaling →
+    BENCH_split_kv.json (see benchmarks/split_kv_bench)."""
+    from benchmarks.split_kv_bench import run_bench
+    payload = run_bench(quick=quick, verbose=False)
+    s = payload["summary"]
+    emit("split_kv.tokens_match", str(s["all_tokens_match"]).lower(),
+         "kv_shards in {1,2,4} commit bit-identical tokens")
+    emit("split_kv.capacity_scaling", f"{s['capacity_scaling']:.2f}x",
+         "aggregate page capacity at 4 shards vs 1 (fixed per-device HBM)")
+    emit("split_kv.collective_kb_per_step",
+         f"{s['collective_bytes_per_step_4shard']/1024:.1f}",
+         "cross-shard flash-partial merge traffic at 4 shards")
 
 
 def telemetry(quick=False):
@@ -580,6 +594,7 @@ ALL = {
     "paged_attn": paged_attn,
     "kv_pressure": kv_pressure,
     "decode_step": decode_step,
+    "split_kv": split_kv,
     "prefill_interleave": prefill_interleave,
     "telemetry": telemetry,
 }

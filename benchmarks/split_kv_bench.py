@@ -1,0 +1,204 @@
+"""Sharded page pool / split-KV paged decode benchmark.
+
+Serves the same fixed batch through :class:`~repro.serving.backends.
+ModelBackend` at ``kv_shards ∈ {1, 2, 4}`` with a FIXED per-device page
+budget and records, per shard count:
+
+* ``aggregate_pages`` / ``pool_bytes``     — total page capacity across the
+  mesh (the tentpole claim: capacity scales ~linearly in shard count when
+  each device contributes the same HBM slice, because no device ever holds
+  the whole pool — the zeros are created under the sharding);
+* ``device_dispatches_per_step``           — per-device program launches per
+  engine decode tick (``kv_shards`` × the single logical fused dispatch);
+* ``collective_bytes_per_step``            — cross-shard flash-partial merge
+  traffic (analytic: each of the ``L`` attention layers all-reduces
+  ``B·c·H·(D+2)`` fp32 partials across ``S`` shards → ``payload·2·(S−1)``
+  ring bytes; 0 when unsharded);
+* ``tokens_match``                         — committed tokens are
+  bit-identical to the single-shard run (the split-KV merge is an exact
+  log-sum-exp combine);
+* ``wall_ms_per_step``                     — mean decode-tick wall clock.
+
+TIMING CAVEAT: off-TPU this runs the jnp ref attention path (or the Pallas
+kernel in interpret mode) over ``xla_force_host_platform_device_count``
+virtual CPU devices, so wall times measure Python/XLA-CPU overhead plus
+emulated collectives — they are NOT representative of real multi-chip
+speedups and typically get *slower* with shard count.  The structural
+columns (capacity, dispatches, collective bytes, token equality) are
+backend-independent; only they support scaling claims.
+
+Writes ``BENCH_split_kv.json`` at the repo root (and a CSV under
+``benchmarks/out/``):
+
+    PYTHONPATH=src python -m benchmarks.split_kv_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+import time
+
+# must happen before jax initializes its backends: expose 8 virtual host
+# devices so the 2- and 4-shard meshes exist on CPU-only machines
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_JSON = os.path.join(REPO_ROOT, "BENCH_split_kv.json")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+SHARDS = (1, 2, 4)
+PROMPT, GEN = 16, 48
+VOCAB = 512
+PAGES_PER_SHARD = 64            # the fixed per-device HBM slice
+
+
+def _build(attn_impl: str):
+    import jax
+
+    from repro.models import ArchConfig, build_model
+    cfg = ArchConfig(name="split-kv-bench", family="dense", n_layers=2,
+                     d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                     vocab_size=VOCAB, block_size=8,
+                     confidence_threshold=0.6)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, B: int, seed: int = 0):
+    from repro.serving.request import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival_time=0.0, prompt_len=PROMPT,
+                    max_new_tokens=GEN,
+                    prompt_tokens=rng.integers(4, cfg.vocab_size,
+                                               PROMPT).tolist())
+            for i in range(B)]
+
+
+def bench_case(model, params, kv_shards: int, B: int, c: int,
+               attn_impl: str, mode: str = "elastic", warmup: int = 2):
+    """Serve one fixed batch to completion on a ``kv_shards``-way pool."""
+    from repro.serving import ModelBackend
+    cfg = model.cfg
+    be = ModelBackend(model, params, max_len=PROMPT + GEN + cfg.block_size,
+                      kv_pages=PAGES_PER_SHARD * kv_shards,
+                      decode_mode=mode, attn_impl=attn_impl,
+                      prefill_mode="wave", kv_shards=kv_shards)
+    for r in _requests(cfg, B):
+        be.admit(r)
+    rids = list(range(B))
+    chunk = 1 if mode == "ar" else c
+    wall, steps, measured = 0.0, 0, 0
+    marks = (0, 0, 0)
+    d_meas = dev_meas = coll_meas = 0
+    while not all(be.state(r).done for r in rids):
+        full = not any(be.state(r).done for r in rids)
+        if steps == warmup:
+            marks = (be.decode_dispatches, be.device_dispatches,
+                     be.collective_bytes)
+        t0 = time.perf_counter()
+        be.decode_step(rids, chunk)
+        dt = time.perf_counter() - t0
+        if steps >= warmup and full:
+            wall += dt
+            measured += 1
+            d_meas = be.decode_dispatches - marks[0]
+            dev_meas = be.device_dispatches - marks[1]
+            coll_meas = be.collective_bytes - marks[2]
+        steps += 1
+    outs = {r: be.state(r).output_tokens for r in rids}
+    n = max(measured, 1)
+    stats = {
+        "kv_shards": kv_shards,
+        "steps": steps,
+        "measured_steps": measured,
+        "wall_ms_per_step": wall / n * 1e3,
+        "dispatches_per_step": d_meas / n,
+        "device_dispatches_per_step": dev_meas / n,
+        "collective_bytes_per_step": coll_meas / n,
+        "aggregate_pages": be.kv.n_pages,
+        "pages_per_shard": be.kv.pages_per_shard,
+        "pool_bytes": int(be.kv.k_pages.nbytes + be.kv.v_pages.nbytes),
+        "shard_pages_in_use_peak":
+            be.kv.gauges().get("shard_pages_in_use"),
+    }
+    return stats, outs
+
+
+def run_bench(quick: bool = False, attn_impl: str | None = None,
+              verbose: bool = True):
+    import jax
+    if attn_impl is None:
+        attn_impl = "kernel" if jax.default_backend() == "tpu" else "ref"
+    shards = [s for s in SHARDS if s <= len(jax.devices())]
+    cfg, model, params = _build(attn_impl)
+    B, c = (2, 8) if quick else (4, 8)
+    rows, base_outs = [], None
+    for S in shards:
+        stats, outs = bench_case(model, params, S, B, c, attn_impl)
+        if base_outs is None:
+            base_outs = outs
+        stats["tokens_match"] = outs == base_outs
+        rows.append(stats)
+        if verbose:
+            print(f"S={S}  pages={stats['aggregate_pages']:4d} "
+                  f"({stats['pages_per_shard']}/shard)  "
+                  f"dev-disp/step {stats['device_dispatches_per_step']:.1f}  "
+                  f"coll B/step {stats['collective_bytes_per_step']:.0f}  "
+                  f"wall {stats['wall_ms_per_step']:.2f} ms  "
+                  f"match={stats['tokens_match']}")
+    hi = rows[-1]
+    payload = {
+        "bench": "split_kv",
+        "backend": jax.default_backend(),
+        "attn_impl": attn_impl,
+        "n_devices": len(jax.devices()),
+        "pages_per_shard": PAGES_PER_SHARD,
+        "note": ("wall times are host-platform virtual-device emulation "
+                 "(ref/interpret attention, software collectives) and are "
+                 "NOT multi-chip-representative; capacity, dispatch, "
+                 "collective-byte and token-equality columns are "
+                 "structural and backend-independent"),
+        "results": rows,
+        "summary": {
+            "all_tokens_match": all(r["tokens_match"] for r in rows),
+            "capacity_scaling":
+                hi["aggregate_pages"] / rows[0]["aggregate_pages"],
+            "max_shards": hi["kv_shards"],
+            "collective_bytes_per_step_4shard":
+                hi["collective_bytes_per_step"],
+            "device_dispatches_per_step":
+                {str(r["kv_shards"]): r["device_dispatches_per_step"]
+                 for r in rows},
+        },
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "split_kv_bench.csv"), "w",
+              newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--impl", default=None, choices=[None, "ref", "kernel"])
+    args = ap.parse_args()
+    run_bench(quick=args.quick, attn_impl=args.impl)
+    print(f"wrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    main()

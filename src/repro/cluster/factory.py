@@ -34,6 +34,7 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                       kv_admission: str = "incremental",
                       prefill_mode: str = "wave",
                       prefill_token_budget: int | None = None,
+                      kv_shards: int = 1,
                       tracer=None
                       ) -> ClusterEngine:
     """N independent SimBackend+scheduler replicas (per-replica RNG seeds,
@@ -53,7 +54,8 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                         kv_pool_pages=kv_pages, seed=seed + 1000 * i,
                         kv_admission=kv_admission,
                         prefill_mode=prefill_mode,
-                        prefill_token_budget=prefill_token_budget)
+                        prefill_token_budget=prefill_token_budget,
+                        kv_shards=kv_shards)
         sch = make_replica_scheduler(be, profile, mode)
         core = EngineCore(be, sch, max_batch=max_batch, tracer=tracer)
         core.replica = i
@@ -73,6 +75,7 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
                         preemption: bool = False,
                         prefill_mode: str = "chunked",
                         prefill_token_budget: int | None = None,
+                        kv_shards: int = 1,
                         tracer=None
                         ) -> ClusterEngine:
     """N real-model replicas (shared params, per-replica KV pool) under one
@@ -88,7 +91,8 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
                           decode_mode="ar" if mode == "ar" else "elastic",
                           kv_pages=kv_pages, page_size=page_size,
                           prefill_mode=prefill_mode,
-                          prefill_token_budget=prefill_token_budget)
+                          prefill_token_budget=prefill_token_budget,
+                          kv_shards=kv_shards)
         sch = scheduler_for_mode(
             mode, AnalyticDeviceModel(model.cfg, CPU_HOST),
             prior_tokens_per_step=profile.tokens_per_step_bd32,

@@ -30,6 +30,8 @@ from jax.sharding import PartitionSpec as P
 #   experts    : MoE expert dim
 #   expert_mlp : per-expert FFN hidden dim
 #   kv_seq     : cached KV sequence dim (decode); seq-sharded for split-KV
+#   kv_pages   : paged KV pool page dim (serving); sharded for split-KV
+#                paged decode (see kv_shard_rules)
 #   state      : SSM state dim
 #   layers     : stacked-layer dim (never sharded)
 # Param-only FSDP aliases (weights can shard differently from activations):
@@ -91,6 +93,7 @@ def training_rules(data_axes=("data",), model_axis="model", fsdp: bool = True) -
         "experts": model_axis,
         "expert_mlp": da_key if fsdp else None,
         "kv_seq": None,
+        "kv_pages": None,
         "state": None,
         "layers": None,
         # FSDP param axes: shard big weight matrices along their non-TP dim.
@@ -128,6 +131,7 @@ def serving_rules(data_axes=("data",), model_axis="model",
         "experts": model_axis,
         "expert_mlp": None,
         "kv_seq": model_axis if seq_shard_kv else None,
+        "kv_pages": None,
         "state": None,
         "layers": None,
         "embed_p": None,
@@ -146,6 +150,20 @@ def long_context_rules(data_axes=("data",), model_axis="model") -> Rules:
     return serving_rules(data_axes, model_axis, moe_2d=True).with_overrides(
         batch=None, kv_seq="data", seq="data",
     )
+
+
+def kv_shard_rules(kv_axis: str = "kv", data_axes=("data",),
+                   model_axis: str = "model") -> Rules:
+    """Sharded-page-pool serving rules: the paged KV pool's *page* dim is
+    sharded over ``kv_axis`` (split-KV paged decode — each shard owns a
+    block of physical pages and attends only over them), and the dense
+    decode cache's ``kv_seq`` moves onto the same axis so both KV layouts
+    agree on where cached KV lives.  ``PagedKVAllocator.init_storage``
+    takes these rules to lay ``k_pages``/``v_pages`` out with
+    ``rules.spec("layers", "kv_pages", None, "kv_heads", "head_dim")``.
+    """
+    return serving_rules(data_axes, model_axis).with_overrides(
+        kv_pages=kv_axis, kv_seq=kv_axis)
 
 
 # ---------------------------------------------------------------------------

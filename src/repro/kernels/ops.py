@@ -20,6 +20,48 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def merge_flash_partials(parts, axis_name=None):
+    """Merge flash partials ``[(acc, m, l), ...]`` over disjoint KV sets
+    into ONE partial ``(acc, m, l)`` — the exact log-sum-exp combine
+    (``acc = Σ e^{logit-m} v``, ``m = max logit``, ``l = Σ e^{logit-m}``).
+
+    With ``axis_name`` the merge additionally reduces across that mapped
+    axis (``pmax`` for m, ``psum`` for acc/l) — the cross-shard half of
+    split-KV attention under ``shard_map``.  The result is itself a valid
+    flash partial, so sharded paged-prefix partials can be merged across
+    shards first and then combined with the in-window partial downstream
+    without any loss of exactness.
+    """
+    m_g = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_g = jnp.maximum(m_g, m)
+    if axis_name is not None:
+        m_g = jax.lax.pmax(m_g, axis_name)
+    acc_g = 0.0
+    l_g = 0.0
+    for acc, m, l in parts:
+        corr = jnp.exp(m - m_g)
+        acc_g = acc_g + acc * corr[..., None]
+        l_g = l_g + l * corr
+    if axis_name is not None:
+        acc_g = jax.lax.psum(acc_g, axis_name)
+        l_g = jax.lax.psum(l_g, axis_name)
+    return acc_g, m_g, l_g
+
+
+def combine_flash_partials(parts, out_dtype=jnp.float32, axis_name=None):
+    """Normalize the merge of flash partials: ``merge → acc / max(l, ε)``.
+
+    The single shared combine used by the models' paged-prefix path
+    (``models/layers.combine_partials``), the kernel oracle
+    (``kernels/ref.combine_ref``) and the split-KV collectives
+    (``distributed/collectives``) — one implementation so the exactness
+    argument (disjoint-KV partials combine associatively) is pinned once.
+    """
+    acc_g, _, l_g = merge_flash_partials(parts, axis_name=axis_name)
+    return (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(out_dtype)
+
+
 def softmax_confidence_device(logits):
     """On-device argmax + softmax top-probability: logits [..., V] →
     (confidence [...] fp32, token [...] int32).
@@ -83,8 +125,8 @@ def paged_chunk_attention_full(q, k_pages, v_pages, block_tables, ctx_lens,
     sm = (sm & valid[:, None, :] & valid[:, :, None]) | \
         jnp.eye(c, dtype=bool)[None]
     acc_w, m_w, l_w = sdpa_partial(q, win_k, win_v, sm[:, None], scale=scale)
-    return ref.combine_ref([(acc_p, m_p, l_p), (acc_w, m_w, l_w)],
-                           out_dtype=q.dtype)
+    return combine_flash_partials([(acc_p, m_p, l_p), (acc_w, m_w, l_w)],
+                                  out_dtype=q.dtype)
 
 
 @partial(jax.jit, static_argnames=("block_size", "q_tile", "kv_tile",

@@ -43,16 +43,11 @@ def paged_chunk_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
 
 
 def combine_ref(parts, out_dtype=jnp.float32):
-    """Combine flash partials [(acc, m, l), ...] exactly."""
-    m_g = parts[0][1]
-    for _, m, _ in parts[1:]:
-        m_g = jnp.maximum(m_g, m)
-    acc_g, l_g = 0.0, 0.0
-    for acc, m, l in parts:
-        corr = jnp.exp(m - m_g)
-        acc_g = acc_g + acc * corr[..., None]
-        l_g = l_g + l * corr
-    return (acc_g / jnp.maximum(l_g, 1e-30)[..., None]).astype(out_dtype)
+    """Combine flash partials [(acc, m, l), ...] exactly (shared
+    implementation: :func:`repro.kernels.ops.combine_flash_partials`;
+    imported lazily — ops imports this module at top level)."""
+    from repro.kernels.ops import combine_flash_partials
+    return combine_flash_partials(parts, out_dtype=out_dtype)
 
 
 def block_diffusion_ref(q, k, v, lengths, *, block_size: int,

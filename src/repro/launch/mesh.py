@@ -4,6 +4,11 @@ A function (not a module-level constant) so importing this module never
 touches jax device state.  Single pod: 16×16 = 256 chips (data, model).
 Multi-pod: 2×16×16 = 512 chips (pod, data, model) — the pod axis acts as an
 outer data axis for training and as a serving replica-group axis.
+
+Serving with a sharded page pool carves a ``kv`` axis out of the data
+axis (``kv_shards > 1``): each of the ``kv_shards`` groups owns a block
+of physical KV pages and split-KV paged decode merges flash partials
+across the axis (``distributed.collectives.split_kv_paged_partial``).
 """
 
 from __future__ import annotations
@@ -11,13 +16,31 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False, kv_shards: int = 1):
+    if kv_shards > 1:
+        assert not multi_pod, "kv sharding + multi-pod not wired yet"
+        assert 16 % kv_shards == 0, kv_shards
+        shape = (kv_shards, 16 // kv_shards, 16)
+        axes = ("kv", "data", "model")
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes,
                          axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
+def make_kv_mesh(kv_shards: int, *, axis: str = "kv"):
+    """1-D ``kv`` mesh over the first ``kv_shards`` local devices — the
+    serving-backend / host-platform-test mesh for the sharded page pool
+    (``ModelBackend(kv_shards=N)``).  Requires at least ``kv_shards``
+    visible devices (CPU tests: ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=8``)."""
+    devs = jax.devices()
+    assert len(devs) >= kv_shards, \
+        f"kv_shards={kv_shards} but only {len(devs)} devices visible"
+    return jax.sharding.Mesh(devs[:kv_shards], (axis,))
+
+
 def data_axes_of(mesh) -> tuple:
-    """All mesh axes except the tensor-parallel one."""
-    return tuple(a for a in mesh.axis_names if a != "model")
+    """All mesh axes except the tensor-parallel and kv-shard ones."""
+    return tuple(a for a in mesh.axis_names if a not in ("model", "kv"))

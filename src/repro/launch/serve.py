@@ -45,6 +45,13 @@ def main():
     ap.add_argument("--kv-pages", type=int, default=None,
                     help="KV pool pages (sim default 65536; model default "
                          "mirrors 8 slots × max_len)")
+    ap.add_argument("--kv-shards", type=int, default=1,
+                    help="split the paged KV pool across this many devices "
+                         "on a 'kv' mesh axis (model backend: split-KV "
+                         "paged decode with exact partial merge; sim "
+                         "backend: sharded allocator bookkeeping). CPU "
+                         "testing: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8")
     ap.add_argument("--kv-admission", default="incremental",
                     choices=["incremental", "reserve"],
                     help="sim backend: incremental page growth with "
@@ -76,7 +83,8 @@ def main():
                              kv_pool_pages=args.kv_pages or 1 << 16,
                              kv_admission=args.kv_admission,
                              prefill_mode=args.prefill_mode,
-                             prefill_token_budget=args.prefill_budget)
+                             prefill_token_budget=args.prefill_budget,
+                             kv_shards=args.kv_shards)
         wl = PoissonWorkload(profile, args.rate, args.requests,
                              seed=args.seed)
         sched = make_scheduler(args.mode, backend, profile)
@@ -91,7 +99,8 @@ def main():
                                else "elastic", obs=args.obs,
                                kv_pages=args.kv_pages,
                                prefill_mode=args.prefill_mode,
-                               prefill_token_budget=args.prefill_budget)
+                               prefill_token_budget=args.prefill_budget,
+                               kv_shards=args.kv_shards)
         import numpy as np
         rng = np.random.default_rng(args.seed)
         wl = PoissonWorkload(profile, args.rate, args.requests,

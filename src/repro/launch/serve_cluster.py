@@ -30,7 +30,8 @@ def run_cluster(args, profile, tracer=None):
         kv_pages=args.kv_pages, max_batch=args.max_batch, seed=args.seed,
         kv_watermark=args.kv_watermark, preemption=args.preemption,
         kv_admission=args.kv_admission, prefill_mode=args.prefill_mode,
-        prefill_token_budget=args.prefill_budget, tracer=tracer)
+        prefill_token_budget=args.prefill_budget,
+        kv_shards=args.kv_shards, tracer=tracer)
     wl = list(make_trace(profile, args.workload, args.rate, args.requests,
                          seed=args.seed))
     frac = args.high_priority_frac
@@ -66,6 +67,10 @@ def main():
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--kv-pages", type=int, default=1 << 16,
                     help="KV pool pages per replica")
+    ap.add_argument("--kv-shards", type=int, default=1,
+                    help="stripe each replica's page pool across this many "
+                         "KV shards (sharded allocator bookkeeping + "
+                         "per-shard telemetry tracks)")
     ap.add_argument("--kv-watermark", type=float, default=0.05,
                     help="free-page fraction kept after admission")
     ap.add_argument("--kv-admission", default="incremental",

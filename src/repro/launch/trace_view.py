@@ -72,6 +72,12 @@ def print_phases(pa: dict):
             print(f"          dispatches: {c.get('decode_dispatches', '-')}"
                   f" decode / {c.get('prefill_dispatches', '-')} prefill,"
                   f" host transfer: {c.get('host_transfer_bytes', '-')} B")
+            if a.get("kv_shards", 1) > 1:
+                print(f"          kv shards: {a['kv_shards']} "
+                      f"(device dispatches: "
+                      f"{c.get('device_dispatches', '-')}, "
+                      f"collective bytes: "
+                      f"{c.get('collective_bytes', '-')} B)")
 
 
 def print_ttft(tb: dict, spans: dict):

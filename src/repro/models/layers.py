@@ -396,17 +396,10 @@ def flash_partial_aligned(q, k, v, *, lengths, kind="causal",
 
 
 def combine_partials(parts, out_dtype):
-    """Combine flash partials [(acc, m, l), ...] into normalized output."""
-    m_g = parts[0][1]
-    for _, m, _ in parts[1:]:
-        m_g = jnp.maximum(m_g, m)
-    acc_g = 0.0
-    l_g = 0.0
-    for acc, m, l in parts:
-        corr = jnp.exp(m - m_g)
-        acc_g = acc_g + acc * corr[..., None]
-        l_g = l_g + l * corr
-    return (acc_g / jnp.clip(l_g, 1e-30)[..., None]).astype(out_dtype)
+    """Combine flash partials [(acc, m, l), ...] into normalized output
+    (shared implementation: :func:`repro.kernels.ops.combine_flash_partials`)."""
+    from repro.kernels.ops import combine_flash_partials
+    return combine_flash_partials(parts, out_dtype=out_dtype)
 
 
 def attn_output(params, cfg: ArchConfig, out):

@@ -115,6 +115,17 @@ def _scatter_pages(pages, new, dest):
     return flat.reshape(L, P, ps, KVH, hd)
 
 
+def _scatter_paged(pages, new, dest, kv_shard=None):
+    """Page-pool scatter, dispatching to the shard-local variant when the
+    pool is sharded (``kv_shard``: a ``KVShardSpec``) — each shard drops
+    out-of-shard destinations so no KV crosses the kv axis and XLA keeps
+    aliasing the per-shard pool buffers (donation)."""
+    if kv_shard is None:
+        return _scatter_pages(pages, new, dest)
+    from repro.distributed.collectives import scatter_pages_sharded
+    return scatter_pages_sharded(pages, new, dest, kv_shard)
+
+
 class TransformerLM:
     """Family-dispatching decoder-only LM."""
 
@@ -251,10 +262,22 @@ class TransformerLM:
             if "page_k" in lx:
                 # paged prefix: block-table-indirected flash partial over the
                 # page pool (Pallas chunked-paged-attention kernel, or the
-                # pure-jnp oracle when paged_attn_impl == "ref")
+                # pure-jnp oracle when paged_attn_impl == "ref").  With a
+                # sharded pool the partial is computed split-KV over the kv
+                # mesh axis — each shard attends over its local pages only
+                # and the partials merge exactly (pmax/psum) on device.
                 kp = lx["page_k"].astype(cfg.cdt)
                 vp = lx["page_v"].astype(cfg.cdt)
-                if shared["paged_impl"] == "ref":
+                ks = shared.get("kv_shard")
+                if ks is not None:
+                    from repro.distributed.collectives import \
+                        split_kv_paged_partial
+                    parts.append(split_kv_paged_partial(
+                        q, kp, vp, shared["block_tables"],
+                        shared["ctx_lens"], shared["shard_offs"], ks,
+                        impl=shared["paged_impl"],
+                        interpret=shared["paged_interpret"]))
+                elif shared["paged_impl"] == "ref":
                     parts.append(kernel_ref.paged_chunk_ref(
                         q, kp, vp, shared["block_tables"],
                         shared["ctx_lens"]))
@@ -437,8 +460,9 @@ class TransformerLM:
             name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
             if name in ("k", "v"):
                 return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
-            if name in ("k_pages", "v_pages"):   # page pool is replicated
-                return ("layers", None, None, "kv_heads", "head_dim")
+            if name in ("k_pages", "v_pages"):   # page dim sharded for
+                return ("layers", "kv_pages", None,  # split-KV paged decode
+                        "kv_heads", "head_dim")      # (kv_shard_rules)
             if name == "len":
                 return ("batch",)
             if name == "wkv":
@@ -595,7 +619,8 @@ class TransformerLM:
                 "v_pages": jnp.zeros(shp, dtype)}
 
     def prefill_paged(self, params, cache, tokens, lengths, block_tables,
-                      mm_embeds=None, mm_mask=None, head_mode="logits"):
+                      mm_embeds=None, mm_mask=None, head_mode="logits",
+                      kv_shard=None):
         """Batched prompt forward writing KV into the page pool.
 
         tokens [B,T] (row-padded), lengths [B], block_tables [B,W] int32.
@@ -608,6 +633,10 @@ class TransformerLM:
         (conf [B], tok [B]) — only AR requests ever read the prefill head,
         and they need just the argmax, so serving never ships [B,V] logits
         to the host.  Returns (head output, new page cache).
+
+        ``kv_shard`` (static ``KVShardSpec`` or None): sharded page pool —
+        the KV scatter stays shard-local (block tables carry GLOBAL page
+        ids; each shard drops pages it doesn't own).
         """
         self._check_paged()
         cfg = self.cfg
@@ -627,8 +656,10 @@ class TransformerLM:
         keep = positions < lengths[:, None]
         dest = _page_dest(block_tables, positions, keep, ps, P)
         new_cache = {
-            "k_pages": _scatter_pages(cache["k_pages"], kv["k"], dest),
-            "v_pages": _scatter_pages(cache["v_pages"], kv["v"], dest)}
+            "k_pages": _scatter_paged(cache["k_pages"], kv["k"], dest,
+                                      kv_shard),
+            "v_pages": _scatter_paged(cache["v_pages"], kv["v"], dest,
+                                      kv_shard)}
         if head_mode == "sample":
             from repro.kernels.ops import softmax_confidence_device
             conf, tok = softmax_confidence_device(logits)
@@ -637,7 +668,8 @@ class TransformerLM:
 
     def prefill_chunk_paged(self, params, cache, tokens, offsets, valid,
                             block_tables, *, impl: str = "kernel",
-                            interpret=None, mm_embeds=None, mm_mask=None):
+                            interpret=None, mm_embeds=None, mm_mask=None,
+                            kv_shard=None, shard_offs=None):
         """One resumable prefill chunk per row: forward prompt tokens
         [offsets, offsets + valid) against the pages already written by
         earlier chunks, and scatter this chunk's KV into the pool.
@@ -669,6 +701,7 @@ class TransformerLM:
         shared.update(block_tables=block_tables.astype(jnp.int32),
                       ctx_lens=offsets.astype(jnp.int32),
                       paged_impl=impl, paged_interpret=interpret)
+        self._shared_kv_shard(shared, kv_shard, shard_offs, B)
         per_layer = {f"pos{j}": {"page_k": cache["k_pages"],
                                  "page_v": cache["v_pages"]}
                      for j in self.attn_positions()}
@@ -682,15 +715,29 @@ class TransformerLM:
         P, ps = cache["k_pages"].shape[1], cache["k_pages"].shape[2]
         dest = _page_dest(block_tables, positions, validm, ps, P)
         new_cache = {
-            "k_pages": _scatter_pages(cache["k_pages"], kv["k"], dest),
-            "v_pages": _scatter_pages(cache["v_pages"], kv["v"], dest)}
+            "k_pages": _scatter_paged(cache["k_pages"], kv["k"], dest,
+                                      kv_shard),
+            "v_pages": _scatter_paged(cache["v_pages"], kv["v"], dest,
+                                      kv_shard)}
         conf, tok = softmax_confidence_device(logits)
         return conf, tok, new_cache
+
+    @staticmethod
+    def _shared_kv_shard(shared, kv_shard, shard_offs, B):
+        """Install the sharded-pool fields read by ``_mixer_apply``'s
+        paged branch (no-op when the pool is unsharded)."""
+        if kv_shard is None:
+            return
+        if shard_offs is None:
+            shard_offs = jnp.zeros((B,), jnp.int32)
+        shared.update(kv_shard=kv_shard,
+                      shard_offs=shard_offs.astype(jnp.int32))
 
     def chunk_forward_paged(self, params, cache, win_tokens, win_start,
                             win_valid, block_tables, ctx_lens, *,
                             impl: str = "kernel", interpret=None,
-                            mm_embeds=None, mm_mask=None):
+                            mm_embeds=None, mm_mask=None,
+                            kv_shard=None, shard_offs=None):
         """Diffusion-window forward against the paged prefix cache.
 
         Same contract as :meth:`chunk_forward`, but the frozen prefix is
@@ -711,6 +758,7 @@ class TransformerLM:
         shared.update(block_tables=block_tables.astype(jnp.int32),
                       ctx_lens=ctx_lens.astype(jnp.int32),
                       paged_impl=impl, paged_interpret=interpret)
+        self._shared_kv_shard(shared, kv_shard, shard_offs, B)
         per_layer = {f"pos{j}": {"page_k": cache["k_pages"],
                                  "page_v": cache["v_pages"]}
                      for j in self.attn_positions()}
@@ -719,7 +767,8 @@ class TransformerLM:
         logits = self.head(params, x)
         return logits, self._collect_kv(kvs)
 
-    def freeze_paged(self, cache, win_kv, block_tables, win_start, n_adv):
+    def freeze_paged(self, cache, win_kv, block_tables, win_start, n_adv,
+                     kv_shard=None):
         """Write the first n_adv[b] window KV entries into the page pool
         (the paged counterpart of :meth:`freeze`; 'len' lives with the
         caller's decode state, not in the cache)."""
@@ -729,15 +778,16 @@ class TransformerLM:
         pos = win_start[:, None] + offs[None, :]
         keep = offs[None, :] < n_adv[:, None]
         dest = _page_dest(block_tables, pos, keep, ps, P)
-        return {"k_pages": _scatter_pages(cache["k_pages"], win_kv["k"],
-                                          dest),
-                "v_pages": _scatter_pages(cache["v_pages"], win_kv["v"],
-                                          dest)}
+        return {"k_pages": _scatter_paged(cache["k_pages"], win_kv["k"],
+                                          dest, kv_shard),
+                "v_pages": _scatter_paged(cache["v_pages"], win_kv["v"],
+                                          dest, kv_shard)}
 
     def decode_step_paged(self, params, cache, win_tokens, win_start,
                           win_valid, block_tables, ctx_lens, n_adv, *,
                           impl: str = "kernel", interpret=None,
-                          mm_embeds=None, mm_mask=None):
+                          mm_embeds=None, mm_mask=None,
+                          kv_shard=None, shard_offs=None):
         """One fused paged decode iteration: chunk-forward + freeze +
         on-device sampling in a single dispatch.
 
@@ -759,9 +809,10 @@ class TransformerLM:
         logits, win_kv = self.chunk_forward_paged(
             params, cache, win_tokens, win_start, win_valid, block_tables,
             ctx_lens, impl=impl, interpret=interpret,
-            mm_embeds=mm_embeds, mm_mask=mm_mask)
+            mm_embeds=mm_embeds, mm_mask=mm_mask,
+            kv_shard=kv_shard, shard_offs=shard_offs)
         new_cache = self.freeze_paged(cache, win_kv, block_tables,
-                                      win_start, n_adv)
+                                      win_start, n_adv, kv_shard=kv_shard)
         conf, tok = softmax_confidence_device(logits)
         return conf, tok, new_cache
 

@@ -210,13 +210,49 @@ def _worst_step_len(st, chunk: int) -> int:
 def _step_page_deficit(kv: PagedKVAllocator, states, rids, chunk: int) -> int:
     """Pages the pool is short of for the batch's worst-case step growth.
     ``<= 0`` means the next step is guaranteed to fit; positive is the
-    number of pages the engine must free (by preempting) before stepping."""
-    need = 0
+    number of pages the engine must free (by preempting) before stepping.
+
+    Sharded pool: a request's growth slots stripe onto specific shards
+    ((offset + slot) % S), so the binding constraint is the worst *shard*
+    deficit, not the aggregate — freeing a victim returns its pages striped
+    ≈ evenly, so the worst shard's shortfall scales by S to a
+    pages-to-free figure."""
+    if kv.kv_shards == 1:
+        need = 0
+        for rid in rids:
+            st = states[rid]
+            need += max(0, kv.pages_for(_worst_step_len(st, chunk))
+                        - kv.table_len(rid))
+        return need - kv.free_pages
+    S = kv.kv_shards
+    need = [0] * S
     for rid in rids:
         st = states[rid]
-        need += max(0, kv.pages_for(_worst_step_len(st, chunk))
-                    - kv.table_len(rid))
-    return need - kv.free_pages
+        t = kv.table_len(rid)
+        grow = kv.pages_for(_worst_step_len(st, chunk)) - t
+        o = kv.stripe_offset(rid)
+        for j in range(max(0, grow)):
+            need[(o + t + j) % S] += 1
+    free = kv.shard_free_pages
+    worst = max(n - f for n, f in zip(need, free))
+    agg = sum(need) - sum(free)
+    return max(agg, worst * S) if worst > 0 else agg
+
+
+def _split_kv_collective_bytes(kv_shards: int, n_attn_layers: int,
+                               n_heads: int, head_dim: int,
+                               batch: int, tokens: int) -> int:
+    """Analytic cross-shard traffic of ONE split-KV fused dispatch.
+
+    Per attention layer the flash partials all-reduce over the kv axis:
+    payload ``B·t·H·(D+2)`` fp32 (acc [B,t,H,D] psum + m [B,t,H] pmax +
+    l [B,t,H] psum), at the ring all-reduce cost of ``2·(S−1)`` payload
+    transfers across the axis per reduction.  The serving telemetry counter
+    tracks this model (interpret-mode CPU meshes don't move real bytes)."""
+    if kv_shards <= 1:
+        return 0
+    payload = batch * tokens * n_heads * (head_dim + 2) * 4
+    return n_attn_layers * payload * 2 * (kv_shards - 1)
 
 
 def _reserve_step(kv: PagedKVAllocator, states, rids, chunk: int):
@@ -289,7 +325,8 @@ class SimBackend:
                  seed: int = 0, include_prefill: bool = True,
                  kv_admission: str = "incremental",
                  prefill_mode: str = "wave",
-                 prefill_token_budget: int | None = None):
+                 prefill_token_budget: int | None = None,
+                 kv_shards: int = 1):
         """obs_policy: the paper enables out-block streaming only for the
         largest chunk (§7.2) — "large_chunk" applies OBS when the scheduler
         picks chunk == block_size; "off"/"always" override."""
@@ -301,7 +338,9 @@ class SimBackend:
         self.analytic = AnalyticDeviceModel(cfg, device, n_chips)
         self.sim = CommitSimulator(tokens_per_step, gamma, cfg.block_size,
                                    cfg.confidence_threshold, seed)
-        self.kv = PagedKVAllocator(kv_pool_pages, page_size)
+        self.kv_shards = kv_shards
+        self.kv = PagedKVAllocator(kv_pool_pages, page_size,
+                                   kv_shards=kv_shards)
         self.kv_admission = kv_admission
         self.grows_kv = kv_admission == "incremental"
         self.decode_mode = decode_mode
@@ -322,6 +361,14 @@ class SimBackend:
         self.decode_dispatches = 0
         self.prefill_dispatches = 0
         self.host_transfer_bytes = 0
+        # shard-aware split of the dispatch accounting: the *_dispatches
+        # counters above stay LOGICAL (one per engine tick phase, however
+        # many kv shards fan the work out) so trace_view phase attribution
+        # never multiply-counts; device_dispatches tracks the per-shard
+        # device programs and collective_bytes the analytic cross-shard
+        # partial-merge traffic
+        self.device_dispatches = 0
+        self.collective_bytes = 0
         self.last_prefill_plan: list[tuple[int, int, int]] = []
 
     def _rng_of(self, rid: int) -> np.random.Generator:
@@ -409,6 +456,8 @@ class SimBackend:
         return {"decode_dispatches": self.decode_dispatches,
                 "prefill_dispatches": self.prefill_dispatches,
                 "host_transfer_bytes": self.host_transfer_bytes,
+                "device_dispatches": self.device_dispatches,
+                "collective_bytes": self.collective_bytes,
                 "prefill_backlog": self._prefill.backlog,
                 "prefill_tick_tokens": self.last_prefill_plan
                 and sum(n for _, _, n in self.last_prefill_plan) or 0}
@@ -519,6 +568,10 @@ class SimBackend:
         if not decode_rids:
             # prefill-only tick: one batched chunk forward
             self.prefill_dispatches += 1
+            self.device_dispatches += self.kv_shards
+            self.collective_bytes += _split_kv_collective_bytes(
+                self.kv_shards, self.cfg.n_layers, self.cfg.n_heads,
+                self.cfg.hd, 1, pf_tokens)
             return self.analytic.step_latency(1, pf_tokens, pf_ctx), infos
         b = max(1, len(decode_rids))
         c_eff = max(1, int(round(float(np.mean(eff_chunks)))) if eff_chunks
@@ -526,6 +579,10 @@ class SimBackend:
         # one fused dispatch per decode tick (prefill chunks ride it);
         # host pulls the 2·[B, c] conf/token scalars back
         self.decode_dispatches += 1
+        self.device_dispatches += self.kv_shards
+        self.collective_bytes += _split_kv_collective_bytes(
+            self.kv_shards, self.cfg.n_layers, self.cfg.n_heads,
+            self.cfg.hd, b, c_eff + -(-pf_tokens // b))
         self.host_transfer_bytes += 16 * b * c_eff
         ctx = float(np.mean(ctxs)) if ctxs else 1.0
         if pf_tokens:
@@ -588,8 +645,9 @@ class ModelBackend:
                  cache_dtype=np.float32, paged: bool | None = None,
                  kv_pages: int | None = None, page_size: int | None = None,
                  attn_impl: str | None = None, interpret: bool | None = None,
-                 fused: bool = True, prefill_mode: str = "chunked",
-                 prefill_token_budget: int | None = None):
+                 prefill_mode: str = "chunked",
+                 prefill_token_budget: int | None = None,
+                 kv_shards: int = 1):
         import functools
 
         import jax
@@ -611,9 +669,15 @@ class ModelBackend:
         self._states: dict[int, object] = {}
         self._req: dict[int, Request] = {}
         # hot-path telemetry (decode_step_bench / acceptance tests)
-        self.decode_dispatches = 0       # jit dispatches issued by decode
-        self.prefill_dispatches = 0      # jit dispatches issued by prefill
+        self.decode_dispatches = 0       # LOGICAL jit dispatches by decode
+        self.prefill_dispatches = 0      # LOGICAL jit dispatches by prefill
         self.host_transfer_bytes = 0     # device→host bytes pulled by decode
+        # shard-aware accounting split (see SimBackend): logical counters
+        # above feed trace_view phase attribution; these track the per-shard
+        # device fan-out and the analytic cross-shard partial-merge traffic
+        self.device_dispatches = 0
+        self.collective_bytes = 0
+        self.kv_shards = kv_shards
         self.prefill_tokens_history: list[int] = []  # prompt tokens per tick
         self.last_prefill_plan: list[tuple[int, int, int]] = []
 
@@ -624,34 +688,56 @@ class ModelBackend:
                 # mirror the historical dense cache's capacity by default so
                 # sizing stays comparable across releases
                 kv_pages = n_slots * (-(-max_len // ps))
-            self.kv = PagedKVAllocator(kv_pages, ps)
-            self.kv.init_storage(*model.paged_kv_dims(), dtype=cache_dtype)
+            # sharded pool: pages split evenly across shards
+            kv_pages = -(-kv_pages // kv_shards) * kv_shards
+            self.kv = PagedKVAllocator(kv_pages, ps, kv_shards=kv_shards)
+            self._kv_shard = None
+            if kv_shards > 1:
+                from repro.distributed.collectives import KVShardSpec
+                from repro.distributed.sharding import kv_shard_rules
+                from repro.launch.mesh import make_kv_mesh
+                mesh = make_kv_mesh(kv_shards)
+                self._kv_shard = KVShardSpec(mesh, kv_shards)
+                self.kv.init_storage(*model.paged_kv_dims(),
+                                     dtype=cache_dtype, mesh=mesh,
+                                     rules=kv_shard_rules())
+                # params were committed to one device at init; replicate
+                # them onto the kv mesh so sharded jits see compatible
+                # shardings
+                from jax.sharding import NamedSharding
+                from jax.sharding import PartitionSpec as _P
+                self.params = params = jax.device_put(
+                    params, NamedSharding(mesh, _P()))
+            else:
+                self.kv.init_storage(*model.paged_kv_dims(),
+                                     dtype=cache_dtype)
             self._table_width = self.kv.pages_for(max_len)
+            self._n_attn_layers = model.paged_kv_dims()[0]
             self._prefill = PrefillScheduler(prefill_token_budget,
                                              _prefill_align(ps, self.cfg))
             impl = attn_impl if attn_impl is not None \
                 else self.cfg.paged_attn_impl
-            self.fused = fused
             # DONATION CONTRACT: every jit below that takes the page-pool
             # cache donates it (the pool aliases in place; XLA updates the
-            # pages without materializing a second pool copy per step).
+            # pages without materializing a second pool copy per step —
+            # per shard when the pool is sharded: the scatter is shard-
+            # local, so input_output_alias survives the shard_map).
             # Callers must treat handles returned by ``_pages_cache`` as
             # consumed once passed to a donating call — ``_store_pages``
             # immediately replaces them with the step's outputs, and any
             # stale outside reference raises on use ("Array has been
             # deleted") rather than reading freed memory.
             self._prefill_paged = jax.jit(
-                functools.partial(model.prefill_paged, head_mode="sample"),
+                functools.partial(model.prefill_paged, head_mode="sample",
+                                  kv_shard=self._kv_shard),
                 donate_argnums=(1,))
             self._prefill_chunk = jax.jit(functools.partial(
-                model.prefill_chunk_paged, impl=impl, interpret=interpret),
+                model.prefill_chunk_paged, impl=impl, interpret=interpret,
+                kv_shard=self._kv_shard),
                 donate_argnums=(1,))
-            self._chunk_paged = jax.jit(functools.partial(
-                model.chunk_forward_paged, impl=impl, interpret=interpret))
-            self._freeze_paged = jax.jit(model.freeze_paged,
-                                         donate_argnums=(0,))
             self._decode_paged = jax.jit(functools.partial(
-                model.decode_step_paged, impl=impl, interpret=interpret),
+                model.decode_step_paged, impl=impl, interpret=interpret,
+                kv_shard=self._kv_shard),
                 donate_argnums=(1,))
         else:
             if supports:
@@ -866,6 +952,21 @@ class ModelBackend:
         self.kv.k_pages = pages["k_pages"]
         self.kv.v_pages = pages["v_pages"]
 
+    def _stripe_offs(self, rids, padded: int) -> np.ndarray:
+        """Padded per-request stripe offsets for a sharded dispatch
+        (padded rows: offset 0 — their ctx is 0, so never read)."""
+        so = np.zeros(padded, np.int32)
+        so[:len(rids)] = self.kv.stripe_offsets(rids)
+        return so
+
+    def _account_device_dispatch(self, batch: int, tokens: int):
+        """One logical dispatch fans out to ``kv_shards`` device programs;
+        the sharded paged partials all-reduce per attention layer."""
+        self.device_dispatches += self.kv_shards
+        self.collective_bytes += _split_kv_collective_bytes(
+            self.kv_shards, self._n_attn_layers, self.cfg.n_heads,
+            self.cfg.hd, batch, tokens)
+
     def _flush_prefills(self) -> set:
         """Wave mode: run the whole deferred backlog as ONE batched prefill
         forward (page pool donated — the prefill scatters into the pool in
@@ -892,6 +993,9 @@ class ModelBackend:
             jnp.asarray(lens, jnp.int32), jnp.asarray(tables))
         self._store_pages(pages)
         self.prefill_dispatches += 1
+        # wave prefill never reads the paged prefix (scatter only) — no
+        # cross-shard partial merge, just the per-shard program fan-out
+        self.device_dispatches += self.kv_shards
         conf = np.asarray(conf)
         tok = np.asarray(tok)
         self.host_transfer_bytes += conf.nbytes + tok.nbytes
@@ -929,12 +1033,17 @@ class ModelBackend:
                                      np.int32)
             offs[i] = off
             val[i] = n
+        kw = {}
+        if self._kv_shard is not None:
+            kw["shard_offs"] = jnp.asarray(self._stripe_offs(
+                [req.rid for req, _, _ in plan], Bp))
         conf, tok, pages = self._prefill_chunk(
             self.params, self._pages_cache(), jnp.asarray(toks),
             jnp.asarray(offs, jnp.int32), jnp.asarray(val, jnp.int32),
-            jnp.asarray(tables))
+            jnp.asarray(tables), **kw)
         self._store_pages(pages)
         self.prefill_dispatches += 1
+        self._account_device_dispatch(Bp, Tp)
         conf = np.asarray(conf)
         tok = np.asarray(tok)
         self.host_transfer_bytes += conf.nbytes + tok.nbytes
@@ -963,6 +1072,8 @@ class ModelBackend:
                "prefill_dispatches": self.prefill_dispatches,
                "host_transfer_bytes": self.host_transfer_bytes}
         if self.paged:
+            out["device_dispatches"] = self.device_dispatches
+            out["collective_bytes"] = self.collective_bytes
             out["prefill_backlog"] = self._prefill.backlog
             out["prefill_tick_tokens"] = self.last_prefill_plan \
                 and sum(n for _, _, n in self.last_prefill_plan) or 0
@@ -979,12 +1090,11 @@ class ModelBackend:
         bucket (padded rows: table 0 / ctx 0 / valid 0 — masked out on
         device) and returns host (conf [B, c], tok [B, c]).
 
-        Fused mode (default): ONE jitted dispatch
-        (``model.decode_step_paged``) runs chunk-forward + freeze +
-        on-device sampling with the page pool donated, and only ``2·B·c``
-        scalars come back.  Pre-fusion mode replays the historical pair —
-        chunk dispatch, full ``[B, c, V]`` logits to host, fp64 sampling,
-        freeze dispatch — as the benchmark baseline.
+        ONE jitted dispatch (``model.decode_step_paged``) runs
+        chunk-forward + freeze + on-device sampling with the page pool
+        donated, and only ``2·B·c`` scalars come back.  (The pre-fusion
+        chunk/host-logits/freeze pair was retired; its cost model survives
+        as the logits-bytes comparison in ``benchmarks/decode_step_bench``.)
         """
         jnp = self.jnp
         B, c = win.shape
@@ -1002,27 +1112,19 @@ class ModelBackend:
         cache = self._pages_cache()
         args = (self.params, cache, jnp.asarray(w, jnp.int32),
                 jnp.asarray(s, jnp.int32), jnp.asarray(v, jnp.int32),
-                jnp.asarray(tables), jnp.asarray(s, jnp.int32))
-        if self.fused:
-            conf, tok, pages = self._decode_paged(
-                *args, jnp.asarray(a, jnp.int32))
-            self._store_pages(pages)
-            self.decode_dispatches += 1
-            conf = np.asarray(conf)
-            tok = np.asarray(tok)
-            self.host_transfer_bytes += conf.nbytes + tok.nbytes
-            return conf[:B], tok[:B].astype(np.int64)
-        logits, win_kv = self._chunk_paged(*args)
+                jnp.asarray(tables), jnp.asarray(s, jnp.int32),
+                jnp.asarray(a, jnp.int32))
+        kw = {}
+        if self._kv_shard is not None:
+            kw["shard_offs"] = jnp.asarray(self._stripe_offs(rids, Bp))
+        conf, tok, pages = self._decode_paged(*args, **kw)
+        self._store_pages(pages)
         self.decode_dispatches += 1
-        logits = np.asarray(logits)
-        self.host_transfer_bytes += logits.nbytes
-        if win_kv is not None and a[:B].any():
-            self._store_pages(self._freeze_paged(
-                cache, win_kv, jnp.asarray(tables),
-                jnp.asarray(s, jnp.int32), jnp.asarray(a, jnp.int32)))
-            self.decode_dispatches += 1
-        conf, tok = softmax_confidence(logits[:B])
-        return conf, tok
+        self._account_device_dispatch(Bp, c)
+        conf = np.asarray(conf)
+        tok = np.asarray(tok)
+        self.host_transfer_bytes += conf.nbytes + tok.nbytes
+        return conf[:B], tok[:B].astype(np.int64)
 
     def _step_ar_paged(self, ar_rids, infos):
         """AR decode over the page pool: c=1 window at the last committed

@@ -15,6 +15,21 @@ to the step's worst-case growth (raising :class:`OutOfPages` when the pool
 is exhausted — the engine's preemption trigger) and ``trim``\\ s the unused
 tail back afterwards, so a request only ever holds pages for KV it has
 actually frozen.
+
+Sharded mode (``kv_shards > 1``): the physical page pool splits into
+``kv_shards`` equal blocks — shard *s* owns global pages
+``[s·P/S, (s+1)·P/S)`` — and each request's table is *strictly striped*:
+table slot ``j`` of a request with stripe offset ``o`` draws its page from
+shard ``(o + j) % S``.  The offset is fixed at ``allocate`` time (the
+shard with the most free pages; ties → lowest index) and recorded, so the
+split-KV attention path can reconstruct every shard's local table on
+device from the replicated global table plus the per-request offset
+(``distributed.collectives.split_kv_paged_partial``).  ``extend`` keeps
+striping from the table's current length, ``trim``/``free`` return each
+page to its owning shard, and :class:`OutOfPages` is raised exactly when
+the specific shard a slot stripes onto is empty — aggregate free pages
+can be positive while a request still cannot grow.  With ``kv_shards=1``
+every code path degenerates to the flat allocator bit-for-bit.
 """
 
 from __future__ import annotations
@@ -32,10 +47,12 @@ class OutOfPages(Exception):
 class PagedKVAllocator:
     n_pages: int
     page_size: int = 16
+    kv_shards: int = 1
 
-    _free: list = field(init=False)
+    _free: list = field(init=False)          # per-shard LIFO free lists
     _tables: dict = field(default_factory=dict, init=False)   # rid → [page,...]
     _lens: dict = field(default_factory=dict, init=False)     # rid → tokens
+    _stripe: dict = field(default_factory=dict, init=False)   # rid → offset
     # incrementally maintained padded block-table rows (see batch_tables):
     # a row goes dirty only when pages are actually appended/popped, so the
     # steady-state decode tick reuses cached rows instead of rebuilding
@@ -47,7 +64,12 @@ class PagedKVAllocator:
     v_pages: object = field(default=None, init=False)
 
     def __post_init__(self):
-        self._free = list(range(self.n_pages - 1, -1, -1))
+        assert self.kv_shards >= 1
+        assert self.n_pages % self.kv_shards == 0, \
+            (self.n_pages, self.kv_shards)
+        pps = self.pages_per_shard
+        self._free = [list(range((s + 1) * pps - 1, s * pps - 1, -1))
+                      for s in range(self.kv_shards)]
 
     def _mark_dirty(self, rid: int):
         self._dirty.add(rid)
@@ -55,23 +77,68 @@ class PagedKVAllocator:
 
     # ------------------------------------------------------------------
     @property
+    def pages_per_shard(self) -> int:
+        return self.n_pages // self.kv_shards
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    @property
     def free_pages(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)
+
+    @property
+    def shard_free_pages(self) -> list[int]:
+        return [len(f) for f in self._free]
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.page_size)
 
+    def _pick_offset(self) -> int:
+        """Stripe offset for a new request: fullest shard, ties → lowest."""
+        if self.kv_shards == 1:
+            return 0
+        best = max(len(f) for f in self._free)
+        return next(s for s, f in enumerate(self._free) if len(f) == best)
+
+    def _shard_counts(self, offset: int, start_slot: int, n: int) -> list[int]:
+        """Pages drawn from each shard by slots [start_slot, start_slot+n)."""
+        counts = [0] * self.kv_shards
+        for j in range(start_slot, start_slot + n):
+            counts[(offset + j) % self.kv_shards] += 1
+        return counts
+
+    def _check_feasible(self, offset: int, start_slot: int, n: int,
+                        what: str):
+        for s, c in enumerate(self._shard_counts(offset, start_slot, n)):
+            if c > len(self._free[s]):
+                if self.kv_shards == 1:
+                    raise OutOfPages(
+                        f"{what} {n} pages, have {len(self._free[0])}")
+                raise OutOfPages(
+                    f"{what} {c} pages on shard {s}, "
+                    f"have {len(self._free[s])} "
+                    f"(free per shard: {self.shard_free_pages})")
+
     def can_admit(self, n_tokens: int) -> bool:
-        return self.pages_for(n_tokens) <= self.free_pages
+        """True iff ``allocate(rid, n_tokens)`` would succeed right now —
+        striping feasibility on the offset ``allocate`` would pick, not
+        just aggregate free pages."""
+        need = self.pages_for(n_tokens)
+        o = self._pick_offset()
+        counts = self._shard_counts(o, 0, need)
+        return all(c <= len(f) for c, f in zip(counts, self._free))
 
     # ------------------------------------------------------------------
     def allocate(self, rid: int, n_tokens: int):
         assert rid not in self._tables, rid
         need = self.pages_for(n_tokens)
-        if need > len(self._free):
-            raise OutOfPages(f"need {need} pages, have {len(self._free)}")
-        self._tables[rid] = [self._free.pop() for _ in range(need)]
+        o = self._pick_offset()
+        self._check_feasible(o, 0, need, "need")
+        self._tables[rid] = [
+            self._free[(o + j) % self.kv_shards].pop() for j in range(need)]
         self._lens[rid] = n_tokens
+        self._stripe[rid] = o
         self._mark_dirty(rid)
         return list(self._tables[rid])
 
@@ -79,11 +146,11 @@ class PagedKVAllocator:
         """Grow a request's allocation to cover ``new_len`` tokens."""
         table = self._tables[rid]
         need = self.pages_for(new_len) - len(table)
-        if need > len(self._free):
-            raise OutOfPages(f"extend needs {need}, have {len(self._free)}")
+        o = self._stripe[rid]
         if need > 0:
-            for _ in range(need):
-                table.append(self._free.pop())
+            self._check_feasible(o, len(table), need, "extend needs")
+            for j in range(len(table), len(table) + need):
+                table.append(self._free[(o + j) % self.kv_shards].pop())
             self._mark_dirty(rid)
         self._lens[rid] = new_len
         return list(table)
@@ -98,14 +165,17 @@ class PagedKVAllocator:
         keep = self.pages_for(new_len)
         if len(table) > keep:
             while len(table) > keep:
-                self._free.append(table.pop())
+                page = table.pop()
+                self._free[self.shard_of(page)].append(page)
             self._mark_dirty(rid)
         self._lens[rid] = min(self._lens[rid], max(new_len, 0))
         return list(table)
 
     def free(self, rid: int):
-        self._free.extend(reversed(self._tables.pop(rid)))
+        for page in reversed(self._tables.pop(rid)):
+            self._free[self.shard_of(page)].append(page)
         self._lens.pop(rid)
+        self._stripe.pop(rid)
         self._rows.pop(rid, None)
         self._dirty.discard(rid)
         self._batch_memo = None
@@ -121,36 +191,71 @@ class PagedKVAllocator:
     def length(self, rid: int) -> int:
         return self._lens[rid]
 
+    def stripe_offset(self, rid: int) -> int:
+        return self._stripe[rid]
+
+    def stripe_offsets(self, rids) -> np.ndarray:
+        """Per-request stripe offsets [B] int32 (all zeros when unsharded)
+        — the device-side companion of ``batch_tables``."""
+        return np.array([self._stripe[rid] for rid in rids], np.int32)
+
     @property
     def utilization(self) -> float:
-        return 1.0 - len(self._free) / self.n_pages
+        return 1.0 - self.free_pages / self.n_pages
 
     def gauges(self) -> dict:
         """Telemetry gauge snapshot (the tracer samples this once per tick
         — the allocator deliberately emits no per-alloc/extend/trim events,
         which would swamp the ring buffer at page granularity)."""
-        free = len(self._free)
-        return {"n_pages": self.n_pages, "free_pages": free,
-                "pages_in_use": self.n_pages - free,
-                "n_requests": len(self._tables),
-                "utilization": 1.0 - free / self.n_pages}
+        free = self.free_pages
+        g = {"n_pages": self.n_pages, "free_pages": free,
+             "pages_in_use": self.n_pages - free,
+             "n_requests": len(self._tables),
+             "utilization": 1.0 - free / self.n_pages}
+        if self.kv_shards > 1:
+            pps = self.pages_per_shard
+            g["kv_shards"] = self.kv_shards
+            g["shard_pages_in_use"] = [pps - len(f) for f in self._free]
+        return g
 
     # ------------------------------------------------------------------
     # Device-side page pool (real-model backends)
     # ------------------------------------------------------------------
     def init_storage(self, n_kv_layers: int, n_kv_heads: int, head_dim: int,
-                     dtype=None):
+                     dtype=None, *, mesh=None, rules=None,
+                     kv_axis: str = "kv"):
         """Allocate the device page pool: [L_attn, P, page_size, KVH, hd].
 
         Each scanned attention layer reads its own [P, page_size, KVH, hd]
         slice — exactly the layout ``paged_chunk_attention_kernel`` expects.
+
+        With ``mesh`` the pool is laid out sharded on the page dim: the
+        PartitionSpec comes from ``rules`` (``kv_shard_rules`` — logical
+        axes ``("layers", "kv_pages", None, "kv_heads", "head_dim")``) or
+        defaults to ``P(None, kv_axis)``; the zeros are created *under* the
+        sharding (jit with out_shardings) so no single device ever holds
+        the whole pool.
         """
+        import jax
         import jax.numpy as jnp
         dtype = jnp.float32 if dtype is None else dtype
         shp = (n_kv_layers, self.n_pages, self.page_size, n_kv_heads,
                head_dim)
-        self.k_pages = jnp.zeros(shp, dtype)
-        self.v_pages = jnp.zeros(shp, dtype)
+        if mesh is None:
+            self.k_pages = jnp.zeros(shp, dtype)
+            self.v_pages = jnp.zeros(shp, dtype)
+        else:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+            if rules is not None:
+                spec = rules.spec("layers", "kv_pages", None, "kv_heads",
+                                  "head_dim")
+            else:
+                spec = P(None, kv_axis)
+            sh = NamedSharding(mesh, spec)
+            alloc = jax.jit(lambda: jnp.zeros(shp, dtype), out_shardings=sh)
+            self.k_pages = alloc()
+            self.v_pages = alloc()
         return self.k_pages, self.v_pages
 
     @property

@@ -40,8 +40,11 @@ CLI ``python -m repro.launch.trace_view`` consumes this) and
 https://ui.perfetto.dev — one process per replica with a tick track,
 request async spans, and counter tracks for ``kv_util``, ``bc``,
 ``prefill_backlog``, ``pages_in_use``, ``host_transfer_bytes``,
-``dispatches`` and ``max_itl``).  :func:`validate_trace_events` is an
-in-repo catapult-format checker used by CI's trace smoke job.
+``dispatches``, ``max_itl``, and — for sharded page pools — per-device
+``device_dispatches`` / ``collective_bytes`` plus one
+``pages_in_use/shard<i>`` track per KV shard).
+:func:`validate_trace_events` is an in-repo catapult-format checker used
+by CI's trace smoke job.
 """
 
 from __future__ import annotations
@@ -80,9 +83,17 @@ NULL_TRACER = NullTracer()
 # and the running ``max_itl`` stall gauge flow through here instead of only
 # appearing in end-of-run reports; ad-hoc series can be added at runtime
 # with :meth:`Tracer.counter`.
+#
+# Dispatch counters are *logical* (one per tick phase) regardless of KV
+# sharding — a split-KV step across N shards is still one decode dispatch.
+# The per-device view gets its own cumulative tracks: ``device_dispatches``
+# (logical × kv_shards) and ``collective_bytes`` (cross-shard flash-partial
+# merge traffic, 0 when unsharded).  Sharded allocators additionally emit
+# one dynamic ``pages_in_use/shard<i>`` track per shard from their gauges.
 COUNTER_FIELDS = ("kv_util", "bc", "prefill_backlog", "pages_in_use",
                   "host_transfer_bytes", "decode_dispatches",
-                  "prefill_dispatches", "max_itl")
+                  "prefill_dispatches", "device_dispatches",
+                  "collective_bytes", "max_itl")
 
 
 class Tracer:
@@ -283,10 +294,16 @@ def _tick_counters(rec: dict):
         "host_transfer_bytes": counters.get("host_transfer_bytes"),
         "decode_dispatches": counters.get("decode_dispatches"),
         "prefill_dispatches": counters.get("prefill_dispatches"),
+        "device_dispatches": counters.get("device_dispatches"),
+        "collective_bytes": counters.get("collective_bytes"),
         "max_itl": rec.get("max_itl"),
     }
-    return [(name, v) for name in COUNTER_FIELDS
-            if (v := vals.get(name)) is not None]
+    out = [(name, v) for name in COUNTER_FIELDS
+           if (v := vals.get(name)) is not None]
+    # sharded page pool: one per-shard utilization track per shard
+    for i, used in enumerate(gauges.get("shard_pages_in_use") or ()):
+        out.append((f"pages_in_use/shard{i}", used))
+    return out
 
 
 _PHASES = {"X", "B", "E", "i", "I", "C", "b", "n", "e", "M", "s", "t", "f",
@@ -490,7 +507,14 @@ def phase_attribution(records: list[dict]) -> dict[int, dict]:
     """Per-replica time attribution over the tick timeline: busy time split
     into decode / mixed (decode + prefill) / prefill-only ticks, idle gaps,
     plus end-of-trace cumulative dispatch and host-transfer counters —
-    NanoFlow-style utilization accounting from the recorded timeline."""
+    NanoFlow-style utilization accounting from the recorded timeline.
+
+    Dispatch counters in the snapshot are *logical* (phase-level): a
+    split-KV step across ``kv_shards`` devices still counts once, so the
+    attribution never multiply-counts per-shard work.  The per-device view
+    lives in the separate ``device_dispatches`` / ``collective_bytes``
+    counters; ``kv_shards`` in the result records the pool's shard count
+    (1 when unsharded)."""
     out: dict[int, dict] = {}
     for rec in records:
         if rec["kind"] != "tick":
@@ -499,7 +523,10 @@ def phase_attribution(records: list[dict]) -> dict[int, dict]:
         a = out.setdefault(r, {"ticks": 0, "busy": 0.0, "decode": 0.0,
                                "mixed": 0.0, "prefill_only": 0.0,
                                "span_start": None, "span_end": None,
-                               "commits": 0, "counters": {}})
+                               "commits": 0, "counters": {},
+                               "kv_shards": 1})
+        gauges = rec.get("gauges") or {}
+        a["kv_shards"] = max(a["kv_shards"], gauges.get("kv_shards", 1))
         t0, dur = rec["t"], rec.get("dur", 0.0)
         a["ticks"] += 1
         a["busy"] += dur
