@@ -59,7 +59,9 @@ def cluster_sweep(quick=False):
         else {2: [2, 4, 8, 16, 32, 48, 96],
               4: [4, 8, 16, 32, 64, 96, 192],
               8: [8, 16, 32, 64, 128, 192, 384]}
-    traces = ["poisson"] if quick else ["poisson", "bursty"]
+    # shared = multi-turn/system-prompt trace: same offered load, but the
+    # replicas' prefix caches absorb most prompt work (PR 8)
+    traces = ["poisson"] if quick else ["poisson", "bursty", "shared"]
 
     rows = []
     cells = {}             # (n, trace, router, rate) -> (mean_tp, mean_p90)

@@ -1,0 +1,241 @@
+"""Cross-request KV reuse benchmark: prefix cache + tiered host spill.
+
+Three experiments over the virtual-clock SimBackend (chunked prefill,
+fixed chunk so committed tokens are comparable cache-on vs cache-off):
+
+1. **Share-ratio grid** — SharedPrefixWorkload at share_ratio ∈
+   {0.0, 0.5, 0.9} with the prefix cache on vs off.  The cache must cut
+   prefill dispatches and TTFT as sharing rises, while every request
+   commits exactly the same tokens (reuse is an allocator-level
+   optimization, not a decode-path change).
+
+2. **Preemption spill-vs-discard** — the same trace through a tight page
+   pool with and without the host tier.  With host pages attached,
+   preemption victims spill and swap back instead of re-prefilling
+   (when the cost model says the transfer wins).
+
+3. **Swap-vs-recompute crossover** — the analytic decision itself:
+   round-trip PCIe transfer time (``swap_cost_s``) against re-prefill
+   latency over prompt length, using the *same* page-bytes and device
+   model the runtime uses.  Short prompts are cheaper to recompute —
+   the crossover is recorded honestly, including the regime where
+   swapping loses.
+
+Emits ``BENCH_kv_reuse.json`` at the repo root and a CSV under
+``benchmarks/out/``.
+
+    PYTHONPATH=src python -m benchmarks.kv_reuse_bench [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import json
+import os
+
+import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+OUT_JSON = os.path.join(REPO_ROOT, "BENCH_kv_reuse.json")
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def _engine(cfg, profile, *, prefix_cache, host_kv_pages=0,
+            kv_pool_pages=1 << 16, seed=0):
+    from repro.core import FixedScheduler
+    from repro.core.latency_model import A100_80G
+    from repro.serving import ServingEngine, SimBackend
+    be = SimBackend(cfg, A100_80G,
+                    tokens_per_step=profile.tokens_per_step_bd32,
+                    kv_pool_pages=kv_pool_pages, seed=seed,
+                    include_prefill=True, prefill_mode="chunked",
+                    prefix_cache=prefix_cache,
+                    host_kv_pages=host_kv_pages)
+    return be, ServingEngine(be, FixedScheduler(8), max_batch=256)
+
+
+def _cell(be, rep):
+    c = be.telemetry_counters()
+    hits, misses = c["prefix_hits"], c["prefix_misses"]
+    return {
+        # chunked prefill rides the fused decode dispatch, so "dispatches
+        # doing prefill work" = ticks with a nonzero prefill plan (plus
+        # the rare standalone prefill-only forward)
+        "prefill_dispatches": c["prefill_dispatches"]
+        + sum(1 for t in be.prefill_tokens_history if t > 0),
+        "prefill_tokens_total": int(sum(be.prefill_tokens_history)),
+        "prefix_hits": hits,
+        "prefix_misses": misses,
+        "prefix_hit_rate": hits / max(hits + misses, 1),
+        "prefix_hit_tokens": c["prefix_hit_tokens"],
+        "cow_copies": c["cow_copies"],
+        "swap_in_bytes": c["swap_in_bytes"],
+        "swap_out_bytes": c["swap_out_bytes"],
+        "throughput_tok_s": rep.throughput,
+        "ttft_p50_ms": rep.ttft_percentile(50) * 1e3,
+        "ttft_p90_ms": rep.ttft_percentile(90) * 1e3,
+        "p90_tpot_ms": rep.tpot_percentile(90) * 1e3,
+        "preemptions": rep.preemptions,
+    }
+
+
+def share_grid(cfg, profile, quick):
+    """Experiment 1: prefix-cache wins vs prompt-share ratio."""
+    from repro.serving import SharedPrefixWorkload
+    shares = [0.0, 0.9] if quick else [0.0, 0.5, 0.9]
+    n_req = 40 if quick else 120
+    rate = 32.0
+    rows = []
+    for share in shares:
+        wl = list(SharedPrefixWorkload(profile, rate, n_req, seed=7,
+                                       share_ratio=share, prefix_len=256,
+                                       max_prompt=1024, max_output=256))
+        cell = {"share_ratio": share}
+        toks = {}
+        for on in (True, False):
+            be, eng = _engine(cfg, profile, prefix_cache=on, seed=7)
+            rep = eng.run([r for r in wl])
+            toks[on] = {m.rid: m.n_tokens for m in rep.metrics}
+            cell["cache_on" if on else "cache_off"] = _cell(be, rep)
+        cell["tokens_match"] = toks[True] == toks[False]
+        rows.append(cell)
+    return rows
+
+
+def preemption_spill(cfg, profile, quick):
+    """Experiment 2: tight pool, preemption victims spill vs discard."""
+    from repro.serving import SharedPrefixWorkload
+    n_req = 30 if quick else 80
+    wl = list(SharedPrefixWorkload(profile, 64.0, n_req, seed=9,
+                                   share_ratio=0.5, prefix_len=256,
+                                   max_prompt=2048, max_output=256))
+    pool = 192                  # tokens pool = 192 * 16 — forces eviction
+    out = {"pool_pages": pool}
+    for host in (0, 4 * pool):
+        be, eng = _engine(cfg, profile, prefix_cache=True,
+                          host_kv_pages=host, kv_pool_pages=pool, seed=9)
+        rep = eng.run([r for r in wl])
+        out["host_tier" if host else "discard"] = _cell(be, rep)
+    return out
+
+
+def swap_crossover(cfg, quick):
+    """Experiment 3: the runtime's own swap-vs-recompute decision curve.
+
+    Two re-prefill costs bracket reality: **standalone** (idle replica,
+    bs-1 forward — what the runtime's ``spill`` gate uses) re-pays the
+    full weight-read floor, so swapping wins at every prompt length on
+    this model/device pairing; **marginal** (busy replica — the chunked
+    prefill rides an already-paid fused dispatch) strips that floor, and
+    there swapping *loses* below the recorded crossover: a short prompt
+    is cheaper to recompute than to move over PCIe."""
+    from repro.core.latency_model import (A100_80G, AnalyticDeviceModel,
+                                          swap_cost_s)
+    from repro.serving import SimBackend
+    be = SimBackend(cfg, A100_80G)        # same page_bytes as the runtime
+    page_bytes, ps = be._page_bytes, be.kv.page_size
+    am = AnalyticDeviceModel(cfg, A100_80G)
+    lengths = [64, 256, 1024, 4096, 16384] if quick else \
+        [64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384]
+    rows, crossover, crossover_marginal = [], None, None
+    for n in lengths:
+        pages = -(-n // ps)
+        swap_s = swap_cost_s(pages, page_bytes, am.device)
+        re_s = am.step_latency(1, n, ctx=n / 2)
+        re_marg = re_s - am.step_latency(1, 1, ctx=n / 2)
+        rows.append({"tokens": n, "pages": pages,
+                     "swap_ms": swap_s * 1e3, "reprefill_ms": re_s * 1e3,
+                     "reprefill_marginal_ms": re_marg * 1e3,
+                     "swap_wins_standalone": swap_s < re_s,
+                     "swap_wins_marginal": swap_s < re_marg})
+        if crossover is None and swap_s < re_s:
+            crossover = n
+        if crossover_marginal is None and swap_s < re_marg:
+            crossover_marginal = n
+    return {"page_bytes": page_bytes, "host_bw_gb_s": am.device.host_bw / 1e9,
+            "rows": rows, "crossover_tokens_standalone": crossover,
+            "crossover_tokens_marginal": crossover_marginal,
+            "swap_loses_below_tokens_on_busy_replica": crossover_marginal}
+
+
+def run_bench(quick=False, verbose=True):
+    from repro.configs import get_config
+    from repro.serving import DATASETS
+
+    cfg = get_config("sdar-8b")
+    profile = DATASETS["sharegpt"]
+
+    grid = share_grid(cfg, profile, quick)
+    spill = preemption_spill(cfg, profile, quick)
+    cross = swap_crossover(cfg, quick)
+
+    hi = grid[-1]                       # highest share ratio
+    on, off = hi["cache_on"], hi["cache_off"]
+    summary = {
+        "share_ratio_hi": hi["share_ratio"],
+        "prefill_token_reduction":
+            off["prefill_tokens_total"] / max(on["prefill_tokens_total"], 1),
+        "prefill_dispatch_reduction":
+            off["prefill_dispatches"] / max(on["prefill_dispatches"], 1),
+        "ttft_p90_gain": off["ttft_p90_ms"] / max(on["ttft_p90_ms"], 1e-9),
+        "prefix_hit_rate_hi": on["prefix_hit_rate"],
+        "tokens_match_all": all(c["tokens_match"] for c in grid),
+        "spill_preemptions_discard": spill["discard"]["preemptions"],
+        "spill_preemptions_host": spill["host_tier"]["preemptions"],
+        "spill_ttft_p90_gain":
+            spill["discard"]["ttft_p90_ms"]
+            / max(spill["host_tier"]["ttft_p90_ms"], 1e-9),
+        "spill_swap_in_bytes": spill["host_tier"]["swap_in_bytes"],
+        "swap_crossover_tokens_standalone":
+            cross["crossover_tokens_standalone"],
+        "swap_loses_below_tokens_on_busy_replica":
+            cross["crossover_tokens_marginal"],
+    }
+
+    payload = {"share_grid": grid, "preemption_spill": spill,
+               "swap_vs_recompute": cross, "summary": summary}
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, "kv_reuse_bench.csv"), "w",
+              newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["share_ratio", "cache", "prefill_tokens",
+                    "prefix_hit_rate", "prefix_hit_tokens", "ttft_p50_ms",
+                    "ttft_p90_ms", "throughput_tok_s", "preemptions"])
+        for cell in grid:
+            for key in ("cache_on", "cache_off"):
+                v = cell[key]
+                w.writerow([cell["share_ratio"], key[6:],
+                            v["prefill_tokens_total"],
+                            f"{v['prefix_hit_rate']:.3f}",
+                            v["prefix_hit_tokens"],
+                            f"{v['ttft_p50_ms']:.2f}",
+                            f"{v['ttft_p90_ms']:.2f}",
+                            f"{v['throughput_tok_s']:.1f}",
+                            v["preemptions"]])
+    if verbose:
+        print(f"share={hi['share_ratio']}: prefill tokens "
+              f"{off['prefill_tokens_total']}->{on['prefill_tokens_total']}, "
+              f"TTFT p90 {off['ttft_p90_ms']:.1f}->{on['ttft_p90_ms']:.1f} ms"
+              f" (hit rate {on['prefix_hit_rate']*100:.0f}%)")
+        print(f"spill: preempt {summary['spill_preemptions_discard']} "
+              f"(discard) vs {summary['spill_preemptions_host']} (host), "
+              f"TTFT p90 gain {summary['spill_ttft_p90_gain']:.2f}x")
+        print(f"swap beats idle-replica re-prefill from "
+              f"{cross['crossover_tokens_standalone']} tokens; loses to "
+              f"busy-replica marginal prefill below "
+              f"{cross['crossover_tokens_marginal']} tokens → {OUT_JSON}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run_bench(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

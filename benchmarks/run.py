@@ -560,6 +560,29 @@ def split_kv(quick=False):
          "cross-shard flash-partial merge traffic at 4 shards")
 
 
+def kv_reuse(quick=False):
+    """Prefix cache + tiered host spill → BENCH_kv_reuse.json
+    (see benchmarks/kv_reuse_bench)."""
+    from benchmarks.kv_reuse_bench import run_bench
+    payload = run_bench(quick=quick, verbose=False)
+    s = payload["summary"]
+    emit("kv_reuse.prefill_token_reduction",
+         f"{s['prefill_token_reduction']:.2f}x",
+         f"share ratio {s['share_ratio_hi']}, hit rate "
+         f"{s['prefix_hit_rate_hi']*100:.0f}%")
+    emit("kv_reuse.ttft_p90_gain", f"{s['ttft_p90_gain']:.2f}x",
+         "cache on vs off at the high-share cell")
+    emit("kv_reuse.tokens_match", str(s["tokens_match_all"]).lower(),
+         "cache on/off commit identical token counts per request")
+    emit("kv_reuse.spill_preemptions",
+         f"{s['spill_preemptions_host']} vs {s['spill_preemptions_discard']}",
+         "host-tier spill vs discard under a tight pool")
+    emit("kv_reuse.swap_loses_below_tokens",
+         f"{s['swap_loses_below_tokens_on_busy_replica']}",
+         "busy-replica marginal re-prefill beats PCIe swap below this; "
+         "full curves in BENCH_kv_reuse.json")
+
+
 def telemetry(quick=False):
     """Tracer overhead: traced vs untraced cluster sweep cells →
     BENCH_telemetry.json (see benchmarks/telemetry_overhead)."""
@@ -597,6 +620,7 @@ ALL = {
     "split_kv": split_kv,
     "prefill_interleave": prefill_interleave,
     "telemetry": telemetry,
+    "kv_reuse": kv_reuse,
 }
 
 

@@ -27,7 +27,13 @@ def kv_tokens(req: Request) -> int:
 
 def admission_pages(core, req: Request) -> int:
     """Pages the replica's backend claims when it admits ``req`` (the
-    backend knows whether it reserves the prompt or the worst case)."""
+    backend knows whether it reserves the prompt or the worst case).
+
+    With the prefix cache this is the demand *net of prefix hits*: the
+    backend's ``admit_pages`` subtracts pages the trie already holds for
+    the prompt (and for a spilled request it is the swap-in footprint),
+    so KV-pressure admission and the saturation router see the true
+    marginal cost of placing the request on this replica."""
     fn = getattr(core.backend, "admit_pages", None)
     if fn is not None:
         return fn(req)

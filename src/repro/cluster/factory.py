@@ -35,6 +35,8 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                       prefill_mode: str = "wave",
                       prefill_token_budget: int | None = None,
                       kv_shards: int = 1,
+                      prefix_cache: bool = True,
+                      host_kv_pages: int = 0,
                       tracer=None
                       ) -> ClusterEngine:
     """N independent SimBackend+scheduler replicas (per-replica RNG seeds,
@@ -55,7 +57,9 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                         kv_admission=kv_admission,
                         prefill_mode=prefill_mode,
                         prefill_token_budget=prefill_token_budget,
-                        kv_shards=kv_shards)
+                        kv_shards=kv_shards,
+                        prefix_cache=prefix_cache,
+                        host_kv_pages=host_kv_pages)
         sch = make_replica_scheduler(be, profile, mode)
         core = EngineCore(be, sch, max_batch=max_batch, tracer=tracer)
         core.replica = i

@@ -32,11 +32,14 @@ class DeviceSpec:
     link_bw: float             # bytes/s per ICI/NVLink link
     overhead_s: float          # fixed per-step launch/dispatch overhead
     hbm_bytes: float
+    host_bw: float = 16e9      # host<->device bytes/s (PCIe/DMA proxy)
 
 
 TPU_V5E = DeviceSpec("tpu-v5e", 197e12, 819e9, 50e9, 25e-6, 16 * 2**30)
-A100_80G = DeviceSpec("a100-80g", 312e12, 2.0e12, 300e9, 40e-6, 80 * 2**30)
-CPU_HOST = DeviceSpec("cpu-host", 1e11, 3e10, 1e10, 1e-4, 32 * 2**30)
+A100_80G = DeviceSpec("a100-80g", 312e12, 2.0e12, 300e9, 40e-6, 80 * 2**30,
+                      host_bw=25e9)
+CPU_HOST = DeviceSpec("cpu-host", 1e11, 3e10, 1e10, 1e-4, 32 * 2**30,
+                      host_bw=3e10)
 
 DEVICES = {d.name: d for d in (TPU_V5E, A100_80G, CPU_HOST)}
 
@@ -83,6 +86,18 @@ def total_param_count(cfg: ArchConfig) -> float:
         n += moe_layers * 3 * d * cfg.moe_ff * (cfg.n_experts - max(cfg.top_k, 1))
     n += cfg.vocab_size * d            # embedding table
     return float(n)
+
+
+def swap_cost_s(n_pages: int, page_bytes: float,
+                device: DeviceSpec) -> float:
+    """Round-trip host<->device transfer time for ``n_pages`` KV pages.
+
+    The tiered KV pool compares this against the analytic re-prefill
+    latency (``AnalyticDeviceModel.step_latency`` over the tokens the
+    pages hold) when deciding whether a preemption victim is worth
+    spilling to host memory: short prompts are cheaper to recompute,
+    long ones cheaper to swap back in."""
+    return 2.0 * n_pages * page_bytes / device.host_bw
 
 
 def kv_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> float:

@@ -16,6 +16,12 @@ capped to smaller chunks (monotonically down to the smallest candidate),
 trading a little token-throughput for fewer OutOfPages preemptions.  This
 makes memory the same kind of runtime control signal as compute
 saturation.
+
+With the cross-request prefix cache (PR 8), ``kv_util`` counts *unique
+physical* pages: a page shared by N block tables contributes once, and
+ref-0 parked prefix pages count as free (they are reclaimable on demand),
+so a warm cache never drives the memory knee — only genuinely pinned
+memory throttles the chunk candidates.
 """
 
 from __future__ import annotations

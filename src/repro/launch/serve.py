@@ -18,9 +18,9 @@ from repro.configs import get_config, get_smoke_config
 from repro.core.latency_model import DEVICES
 from repro.core.scheduler import ElasticScheduler, scheduler_for_mode
 from repro.models.registry import build_model
-from repro.serving import (DATASETS, ModelBackend, PoissonWorkload,
-                           ServingEngine, SimBackend, Tracer,
-                           chunk_distribution)
+from repro.serving import (DATASETS, ModelBackend, ServingEngine,
+                           SimBackend, Tracer, chunk_distribution,
+                           make_trace)
 
 
 def make_scheduler(mode: str, backend, profile):
@@ -64,8 +64,23 @@ def main():
                          "wave: the monolithic whole-admission-wave "
                          "prefill baseline")
     ap.add_argument("--prefill-budget", type=int, default=None,
-                    help="max prompt tokens prefetched per engine tick "
-                         "(default: 4 aligned chunks)")
+                    help="fixed max prompt tokens prefetched per engine "
+                         "tick (default: adaptive Sarathi-style budget "
+                         "target_bc - live b*c)")
+    ap.add_argument("--workload", default="poisson",
+                    choices=["poisson", "bursty", "diurnal", "shared"],
+                    help="arrival trace: shared = multi-turn/system-prompt "
+                         "trace with real token ids (exercises the prefix "
+                         "cache)")
+    ap.add_argument("--share-ratio", type=float, default=0.8,
+                    help="shared workload: fraction of fresh requests "
+                         "prepending a pooled system prompt")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request KV prefix reuse")
+    ap.add_argument("--host-kv-pages", type=int, default=0,
+                    help="host-memory spill tier capacity in pages "
+                         "(0 = disabled); preemptions spill instead of "
+                         "discarding when the cost model favors the swap")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record the telemetry timeline to PATH (JSONL) "
                          "and PATH's stem + .perfetto.json (Chrome "
@@ -74,6 +89,8 @@ def main():
     args = ap.parse_args()
 
     profile = DATASETS[args.dataset]
+    wl_kw = {"share_ratio": args.share_ratio} \
+        if args.workload == "shared" else {}
     if args.backend == "sim":
         cfg = get_config(args.arch)
         backend = SimBackend(cfg, DEVICES[args.device],
@@ -84,9 +101,11 @@ def main():
                              kv_admission=args.kv_admission,
                              prefill_mode=args.prefill_mode,
                              prefill_token_budget=args.prefill_budget,
-                             kv_shards=args.kv_shards)
-        wl = PoissonWorkload(profile, args.rate, args.requests,
-                             seed=args.seed)
+                             kv_shards=args.kv_shards,
+                             prefix_cache=not args.no_prefix_cache,
+                             host_kv_pages=args.host_kv_pages)
+        wl = make_trace(profile, args.workload, args.rate, args.requests,
+                        seed=args.seed, **wl_kw)
         sched = make_scheduler(args.mode, backend, profile)
     else:
         cfg = get_smoke_config(args.arch)
@@ -100,16 +119,27 @@ def main():
                                kv_pages=args.kv_pages,
                                prefill_mode=args.prefill_mode,
                                prefill_token_budget=args.prefill_budget,
-                               kv_shards=args.kv_shards)
+                               kv_shards=args.kv_shards,
+                               prefix_cache=not args.no_prefix_cache,
+                               host_kv_pages=args.host_kv_pages)
         import numpy as np
         rng = np.random.default_rng(args.seed)
-        wl = PoissonWorkload(profile, args.rate, args.requests,
-                             seed=args.seed, max_prompt=64, max_output=64)
+        mkw = dict(wl_kw)
+        if args.workload == "shared":
+            # real ids must stay inside the smoke vocab (away from the
+            # reserved mask/eos ids at the top)
+            mkw.update(vocab=max(cfg.vocab_size - 8, 16), prefix_len=32)
+        wl = make_trace(profile, args.workload, args.rate, args.requests,
+                        seed=args.seed, max_prompt=64, max_output=64, **mkw)
         for r in wl.requests:
             r.prompt_len = min(r.prompt_len, 64)
             r.max_new_tokens = min(r.max_new_tokens, 64)
-            r.prompt_tokens = rng.integers(
-                4, cfg.vocab_size, r.prompt_len).tolist()
+            if r.prompt_tokens is not None:
+                # shared trace carries real ids; just clamp to max_prompt
+                r.prompt_tokens = r.prompt_tokens[:r.prompt_len]
+            else:
+                r.prompt_tokens = rng.integers(
+                    4, cfg.vocab_size, r.prompt_len).tolist()
         # wall-clock-free scheduler from a quick analytic stand-in
         from repro.core.latency_model import AnalyticDeviceModel, CPU_HOST
         if args.mode == "elastic":

@@ -31,9 +31,14 @@ def run_cluster(args, profile, tracer=None):
         kv_watermark=args.kv_watermark, preemption=args.preemption,
         kv_admission=args.kv_admission, prefill_mode=args.prefill_mode,
         prefill_token_budget=args.prefill_budget,
-        kv_shards=args.kv_shards, tracer=tracer)
+        kv_shards=args.kv_shards,
+        prefix_cache=not getattr(args, "no_prefix_cache", False),
+        host_kv_pages=getattr(args, "host_kv_pages", 0), tracer=tracer)
+    wl_kw = {"share_ratio": args.share_ratio} \
+        if getattr(args, "share_ratio", None) is not None \
+        and args.workload == "shared" else {}
     wl = list(make_trace(profile, args.workload, args.rate, args.requests,
-                         seed=args.seed))
+                         seed=args.seed, **wl_kw))
     frac = args.high_priority_frac
     if frac is None:
         frac = 0.25 if args.preemption else 0.0
@@ -55,8 +60,18 @@ def main():
     ap.add_argument("--router", default="saturation",
                     help="round_robin | jsq | saturation")
     ap.add_argument("--workload", default="poisson",
-                    choices=["poisson", "bursty", "diurnal"],
-                    help="open-loop arrival process shape")
+                    choices=["poisson", "bursty", "diurnal", "shared"],
+                    help="open-loop arrival process shape; shared = "
+                         "multi-turn/system-prompt trace with real token "
+                         "ids (exercises the prefix cache)")
+    ap.add_argument("--share-ratio", type=float, default=0.8,
+                    help="shared workload: fraction of fresh requests "
+                         "prepending a pooled system prompt")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable cross-request KV prefix reuse")
+    ap.add_argument("--host-kv-pages", type=int, default=0,
+                    help="per-replica host spill tier capacity in pages "
+                         "(0 = disabled)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record the telemetry timeline to PATH (JSONL) "
                          "and PATH's stem + .perfetto.json (Chrome "
@@ -84,8 +99,9 @@ def main():
                          "wave: charge each admission's whole prompt "
                          "synchronously (baseline)")
     ap.add_argument("--prefill-budget", type=int, default=None,
-                    help="max prompt tokens prefetched per replica tick "
-                         "(default: 4 aligned chunks)")
+                    help="fixed max prompt tokens prefetched per replica "
+                         "tick (default: adaptive Sarathi-style budget "
+                         "target_bc - live b*c)")
     ap.add_argument("--preemption", action="store_true",
                     help="evict low-priority requests under KV pressure")
     ap.add_argument("--high-priority-frac", type=float, default=None,

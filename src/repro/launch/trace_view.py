@@ -72,6 +72,17 @@ def print_phases(pa: dict):
             print(f"          dispatches: {c.get('decode_dispatches', '-')}"
                   f" decode / {c.get('prefill_dispatches', '-')} prefill,"
                   f" host transfer: {c.get('host_transfer_bytes', '-')} B")
+            hits = c.get("prefix_hits")
+            if hits is not None:
+                total = hits + (c.get("prefix_misses") or 0)
+                rate = hits / total if total else 0.0
+                print(f"          kv cache: {hits}/{total} prefix hits "
+                      f"({rate * 100:.1f}%), "
+                      f"{c.get('prefix_hit_tokens', 0)} prompt tokens "
+                      f"served from cache, "
+                      f"{c.get('cow_copies', 0)} COW copies, swap "
+                      f"in/out: {c.get('swap_in_bytes', 0)}/"
+                      f"{c.get('swap_out_bytes', 0)} B")
             if a.get("kv_shards", 1) > 1:
                 print(f"          kv shards: {a['kv_shards']} "
                       f"(device dispatches: "

@@ -119,11 +119,41 @@ def _scatter_paged(pages, new, dest, kv_shard=None):
     """Page-pool scatter, dispatching to the shard-local variant when the
     pool is sharded (``kv_shard``: a ``KVShardSpec``) — each shard drops
     out-of-shard destinations so no KV crosses the kv axis and XLA keeps
-    aliasing the per-shard pool buffers (donation)."""
+    aliasing the per-shard pool buffers (donation).
+
+    COW safety: the scatter itself never needs to know about sharing —
+    the allocator's ``ensure_private`` runs *before* any dispatch that
+    writes a page, so by the time destinations reach here every written
+    page is refcount-1 and unregistered.  The page-granular movement
+    primitives live below (:func:`copy_pages`, :func:`write_pages`)."""
     if kv_shard is None:
         return _scatter_pages(pages, new, dest)
     from repro.distributed.collectives import scatter_pages_sharded
     return scatter_pages_sharded(pages, new, dest, kv_shard)
+
+
+def copy_pages(cache, src, dst):
+    """Whole-page device-side copy: ``cache[name][:, dst[i]] ←
+    cache[name][:, src[i]]`` for every pool array in ``cache``.
+
+    This is the copy-on-write kernel: callers jit it with
+    ``donate_argnums=(0,)`` so the pool buffers alias in place (same
+    donation contract as the decode scatter).  All gathers read the
+    *input* array before any scatter lands, so chained src/dst overlaps
+    within one batched call are safe; duplicate (src, dst) pairs (the
+    pow-2 index padding) are idempotent."""
+    return {name: arr.at[:, dst].set(arr[:, src])
+            for name, arr in cache.items()}
+
+
+def write_pages(cache, dst, k_new, v_new):
+    """Whole-page host→device swap-in scatter: page ``dst[i]`` of the pool
+    receives ``k_new[:, i]`` / ``v_new[:, i]`` ([L, n, ps, KVH, hd]).
+    Jitted with ``donate_argnums=(0,)`` by the allocator so the pool
+    aliases in place; duplicate padded indices write identical data."""
+    k, v = cache["k_pages"], cache["v_pages"]
+    return {"k_pages": k.at[:, dst].set(k_new.astype(k.dtype)),
+            "v_pages": v.at[:, dst].set(v_new.astype(v.dtype))}
 
 
 class TransformerLM:

@@ -2,7 +2,8 @@ from repro.serving.backends import (ARState, ModelBackend, PrefillScheduler,
                                     SimBackend, StepInfo)
 from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.engine import EngineCore, EngineReport, ServingEngine
-from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
+from repro.serving.kv_pool import (HostPagePool, OutOfPages,
+                                   PagedKVAllocator, PrefixMatch)
 from repro.serving.metrics import (ClusterReport, chunk_distribution,
                                    slo_capacity)
 from repro.serving.request import Request, RequestMetrics
@@ -11,16 +12,19 @@ from repro.serving.telemetry import (NULL_TRACER, NullTracer, Tracer,
                                      validate_trace_events)
 from repro.serving.workload import (DATASETS, CommitSimulator, DatasetProfile,
                                     PoissonWorkload, RateVaryingWorkload,
-                                    bursty_rate, diurnal_rate,
-                                    fixed_batch_workload, make_trace)
+                                    SharedPrefixWorkload, bursty_rate,
+                                    diurnal_rate, fixed_batch_workload,
+                                    make_trace)
 
 __all__ = [
     "ARState", "ModelBackend", "PrefillScheduler", "SimBackend", "StepInfo",
     "VirtualClock",
     "WallClock", "EngineCore", "EngineReport", "ServingEngine", "OutOfPages",
-    "PagedKVAllocator", "ClusterReport", "chunk_distribution", "slo_capacity",
+    "PagedKVAllocator", "HostPagePool", "PrefixMatch",
+    "ClusterReport", "chunk_distribution", "slo_capacity",
     "Request", "RequestMetrics", "DATASETS", "CommitSimulator",
-    "DatasetProfile", "PoissonWorkload", "RateVaryingWorkload", "bursty_rate",
+    "DatasetProfile", "PoissonWorkload", "RateVaryingWorkload",
+    "SharedPrefixWorkload", "bursty_rate",
     "diurnal_rate", "fixed_batch_workload", "make_trace",
     "NULL_TRACER", "NullTracer", "Tracer", "load_jsonl", "replay_select",
     "validate_trace_events",

@@ -36,7 +36,9 @@ import numpy as np
 from repro.core.chunked import (ChunkedDecodeState, batch_apply_step,
                                 batch_windows, freeze_run)
 from repro.core.diffusion import softmax_confidence
-from repro.core.latency_model import AnalyticDeviceModel, DeviceSpec, TPU_V5E
+from repro.core.latency_model import (AnalyticDeviceModel, DeviceSpec,
+                                      TPU_V5E, kv_bytes_per_token,
+                                      swap_cost_s)
 from repro.models.common import ArchConfig
 from repro.serving.kv_pool import OutOfPages, PagedKVAllocator
 from repro.serving.request import Request
@@ -125,18 +127,48 @@ class PrefillScheduler:
     never stall the queue head: the head request always receives tokens
     every tick (no starvation), and later requests only wait on FCFS
     order.
+
+    Budget sizing: with an explicit ``budget`` the per-tick token cap is
+    fixed (the legacy ``--prefill-budget`` mode).  With ``budget=None``
+    and a ``target_bc``, sizing is adaptive (Sarathi-style): each tick
+    hands out ``target_bc − b·c`` prompt tokens — filling the fused
+    dispatch up to the device's compute-saturation workload net of the
+    tick's live decode tokens — so prefill rides the dispatch for free
+    below saturation instead of being throttled by a one-size constant
+    (the fixed default cost 0.55–0.68× prompt throughput past
+    saturation).  Cached prefix tokens never enter the budget at all:
+    ``add`` starts the cursor past them.
     """
 
-    def __init__(self, budget: int | None, align: int):
+    def __init__(self, budget: int | None, align: int,
+                 target_bc: int | None = None):
         self.align = max(1, int(align))
+        self.fixed = budget is not None
         self.budget = max(int(budget), self.align) if budget is not None \
             else 4 * self.align
+        self.target_bc = int(target_bc) if target_bc is not None else None
         self.queue: list[Request] = []        # FCFS over admissions
         self.cursor: dict[int, int] = {}      # rid → prompt tokens prefilled
 
-    def add(self, req: Request):
+    def add(self, req: Request, start: int = 0) -> bool:
+        """Queue a request's prefill from ``start`` (tokens a prefix-cache
+        hit already covers skip the budget entirely).  Returns True when
+        the prompt is already fully covered — nothing is queued and the
+        request can decode immediately."""
+        if start >= req.prompt_len:
+            return True
         self.queue.append(req)
-        self.cursor[req.rid] = 0
+        self.cursor[req.rid] = int(start)
+        return False
+
+    def tick_budget(self, live_bc: int = 0) -> int:
+        """Prompt tokens this tick may hand out.  Fixed mode returns the
+        constructor budget; adaptive mode returns ``target_bc − live_bc``
+        clamped to at least one aligned chunk (the queue head always
+        advances, so alignment can never starve it)."""
+        if self.fixed or self.target_bc is None:
+            return self.budget
+        return max(self.align, self.target_bc - max(int(live_bc), 0))
 
     def remove(self, rid: int):
         """Drop a request (release / preemption): the cursor is discarded —
@@ -152,10 +184,11 @@ class PrefillScheduler:
     def backlog(self) -> int:
         return sum(r.prompt_len - self.cursor[r.rid] for r in self.queue)
 
-    def plan(self) -> list[tuple[Request, int, int]]:
+    def plan(self, live_bc: int = 0) -> list[tuple[Request, int, int]]:
         """This tick's chunk assignments [(req, offset, n_tokens)]:
-        Σ n_tokens ≤ budget, FCFS, ends aligned except final chunks."""
-        out, left = [], self.budget
+        Σ n_tokens ≤ tick_budget(live_bc), FCFS, ends aligned except
+        final chunks."""
+        out, left = [], self.tick_budget(live_bc)
         for req in self.queue:
             if left <= 0:
                 break
@@ -326,10 +359,17 @@ class SimBackend:
                  kv_admission: str = "incremental",
                  prefill_mode: str = "wave",
                  prefill_token_budget: int | None = None,
-                 kv_shards: int = 1):
+                 kv_shards: int = 1, prefix_cache: bool = True,
+                 host_kv_pages: int = 0):
         """obs_policy: the paper enables out-block streaming only for the
         largest chunk (§7.2) — "large_chunk" applies OBS when the scheduler
-        picks chunk == block_size; "off"/"always" override."""
+        picks chunk == block_size; "off"/"always" override.
+
+        prefix_cache: register finished prompt prefills in the allocator's
+        trie and attach matching pages to later admissions (inert for
+        traces without real ``prompt_tokens``).  host_kv_pages > 0 attaches
+        the host spill tier: preemption victims spill (and swap back on
+        re-admission) when the transfer beats re-prefilling."""
         if kv_admission not in ("incremental", "reserve"):
             raise ValueError(f"unknown kv_admission {kv_admission!r}")
         if prefill_mode not in ("chunked", "wave"):
@@ -348,8 +388,25 @@ class SimBackend:
         self.obs_policy = "always" if obs else obs_policy
         self.include_prefill = include_prefill
         self.prefill_mode = prefill_mode
-        self._prefill = PrefillScheduler(prefill_token_budget,
-                                         _prefill_align(page_size, cfg))
+        align = _prefill_align(page_size, cfg)
+        target_bc = None
+        if prefill_token_budget is None and prefill_mode == "chunked":
+            # adaptive default: fill each tick up to the device's
+            # compute-saturation workload (clamped to sane bounds)
+            target_bc = int(min(max(self.analytic.saturation_ew(), align),
+                                8192))
+        self._prefill = PrefillScheduler(prefill_token_budget, align,
+                                         target_bc=target_bc)
+        self._prefix_align = align
+        self.prefix_cache = prefix_cache
+        if host_kv_pages:
+            self.kv.attach_host(host_kv_pages)
+        # analytic bytes per page for the swap-vs-recompute cost model and
+        # the swap byte counters (the sim pool has no real storage)
+        self._page_bytes = kv_bytes_per_token(cfg) * page_size
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_tokens = 0
         self.prefill_tokens_history: list[int] = []
         self._states: dict[int, object] = {}
         self._seed = seed
@@ -379,11 +436,41 @@ class SimBackend:
         return rng
 
     # ------------------------------------------------------------------
+    def _prefix_lookup(self, req: Request):
+        """Admission-time prefix match, with the host-tier cost model
+        applied: chain pages resident only on the host are swapped back
+        only when the transfer beats recomputing their tokens, else the
+        match truncates to its device-resident head."""
+        if not self.prefix_cache or req.prompt_tokens is None \
+                or self.kv_admission == "reserve":
+            return None
+        m = self.kv.lookup_prefix(req.prompt_tokens, req.prompt_len,
+                                  align=self._prefix_align)
+        if m is not None and m.n_host:
+            swap_s = m.n_host * self._page_bytes / self.analytic.device.host_bw
+            re_s = self.analytic.step_latency(
+                1, m.n_host * self.kv.page_size, ctx=m.covered / 2)
+            if swap_s >= re_s:
+                m = m.device_only(self._prefix_align)
+        return m
+
+    def _register(self, req: Request):
+        """Index a fully prefilled prompt in the prefix trie."""
+        if self.prefix_cache and self.kv_admission != "reserve":
+            self.kv.register_prefix(req.rid, req.prompt_tokens,
+                                    limit=req.prompt_len)
+
     def admit_pages(self, req: Request) -> int:
         """Pages claimed at admission — the cluster admission policy's
-        reservation unit (prompt-only under incremental growth)."""
+        reservation unit (prompt-only under incremental growth, *net of
+        prefix hits*: device-cached pages attach without new pages)."""
         if self.kv_admission == "reserve":
             return self.kv.pages_for(req.prompt_len + req.max_new_tokens)
+        if self.kv.is_spilled(req.rid):
+            return self.kv.spilled_pages(req.rid)
+        m = self._prefix_lookup(req)
+        if m is not None:
+            return self.kv.pages_for(req.prompt_len) - m.n_device
         return self.kv.pages_for(req.prompt_len)
 
     def can_admit(self, req: Request) -> bool:
@@ -392,10 +479,26 @@ class SimBackend:
             return self.kv.can_admit(total)
         # prompt pages must be free now; the full footprint must fit the
         # pool *ever*, else a lone request could deadlock mid-decode
-        return (self.kv.pages_for(total) <= self.kv.n_pages
-                and self.kv.can_admit(req.prompt_len))
+        if self.kv.pages_for(total) > self.kv.n_pages:
+            return False
+        if self.kv.is_spilled(req.rid):
+            return self.kv.can_swap_in(req.rid)
+        m = self._prefix_lookup(req)
+        if m is not None:
+            return self.kv.can_admit_prefix(req.prompt_len, m)
+        return self.kv.can_admit(req.prompt_len)
 
     def admit(self, req: Request) -> float:
+        if self.kv.is_spilled(req.rid):
+            # spill-resume: the decode state and per-request RNG stream
+            # were retained at spill time, so the trajectory continues
+            # exactly where preemption stopped it; admission charges the
+            # host→device transfer instead of a re-prefill
+            n = self.kv.spilled_pages(req.rid)
+            self.kv.swap_in_request(req.rid)
+            if not self.include_prefill:
+                return 0.0
+            return n * self._page_bytes / self.analytic.device.host_bw
         mode = _decode_mode_for(self.cfg, self.decode_mode)
         if mode == "ar":
             st = ARState(req.prompt_len, req.max_new_tokens)
@@ -407,24 +510,70 @@ class SimBackend:
                 mask_token=self.cfg.mask_token_id, eos_token=None,
                 mode=mode, obs=self.obs)
         self._states[req.rid] = st
+        covered = 0
         if self.kv_admission == "reserve":
             self.kv.allocate(req.rid, req.prompt_len + req.max_new_tokens)
         else:
-            self.kv.allocate(req.rid, req.prompt_len)
+            m = self._prefix_lookup(req)
+            if m is not None:
+                self.kv.allocate_prefix(req.rid, req.prompt_len, m)
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += m.covered
+                covered = m.covered
+            else:
+                if self.prefix_cache and req.prompt_tokens is not None:
+                    self.prefix_misses += 1
+                self.kv.allocate(req.rid, req.prompt_len)
         if not self.include_prefill:
+            self._register(req)
             return 0.0
         if self.prefill_mode == "chunked":
-            # prefill latency is charged chunk-by-chunk inside decode ticks
-            self._prefill.add(req)
+            # prefill latency is charged chunk-by-chunk inside decode
+            # ticks; cached tokens never enter the budget
+            if self._prefill.add(req, start=covered):
+                self._register(req)
             return 0.0
-        return self.analytic.step_latency(1, req.prompt_len,
-                                          ctx=req.prompt_len / 2)
+        # wave: only the uncovered prompt span is charged synchronously
+        self._register(req)
+        if covered >= req.prompt_len:
+            return 0.0
+        if covered == 0:
+            return self.analytic.step_latency(1, req.prompt_len,
+                                              ctx=req.prompt_len / 2)
+        rem = req.prompt_len - covered
+        return self.analytic.step_latency(1, rem, ctx=covered + rem / 2)
 
     def release(self, rid: int):
         self._prefill.remove(rid)
-        self.kv.free(rid)
+        if self.kv.is_spilled(rid):
+            self.kv.discard_spilled(rid)
+        else:
+            self.kv.free(rid)
         self._states.pop(rid)
         self._req_rng.pop(rid, None)
+
+    def spill(self, rid: int) -> bool:
+        """Preempt→spill: move the victim's pages to the host tier, keep
+        its decode state + RNG stream, and resume via swap-in at
+        re-admission — the preemption costs a transfer, not a re-prefill
+        (and the resumed trajectory is identical to an uninterrupted run).
+        Returns False — caller falls back to the discard path — when
+        there is no host tier, the victim is still mid-prefill (the
+        cursor would be lost), or the cost model says recomputing its
+        tokens is cheaper than the round-trip transfer."""
+        if self.kv.host is None or self._prefill.pending(rid) \
+                or self.kv.is_spilled(rid):
+            return False
+        st = self._states.get(rid)
+        if st is None:
+            return False
+        toks = st.prompt_len + st.frozen
+        swap_s = swap_cost_s(self.kv.table_len(rid), self._page_bytes,
+                             self.analytic.device)
+        re_s = self.analytic.step_latency(1, toks, ctx=toks / 2)
+        if swap_s >= re_s:
+            return False
+        return self.kv.spill_request(rid) is not None
 
     def state(self, rid: int):
         return self._states[rid]
@@ -441,7 +590,7 @@ class SimBackend:
         """Prompt tokens the next tick's prefill phase will process — the
         saturation signal the elastic scheduler folds into chunk choice."""
         backlog = self._prefill.backlog
-        return min(self._prefill.budget, backlog)
+        return min(self._prefill.tick_budget(), backlog)
 
     def decode_batch_size(self, rids) -> int:
         """Requests the next decode dispatch will actually include —
@@ -453,6 +602,7 @@ class SimBackend:
 
     def telemetry_counters(self) -> dict:
         """Cumulative counters the tracer samples once per tick."""
+        ks = self.kv.stats
         return {"decode_dispatches": self.decode_dispatches,
                 "prefill_dispatches": self.prefill_dispatches,
                 "host_transfer_bytes": self.host_transfer_bytes,
@@ -460,9 +610,17 @@ class SimBackend:
                 "collective_bytes": self.collective_bytes,
                 "prefill_backlog": self._prefill.backlog,
                 "prefill_tick_tokens": self.last_prefill_plan
-                and sum(n for _, _, n in self.last_prefill_plan) or 0}
+                and sum(n for _, _, n in self.last_prefill_plan) or 0,
+                "prefix_hits": self.prefix_hits,
+                "prefix_misses": self.prefix_misses,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "pages_shared": self.kv.pages_shared,
+                "cow_copies": ks["cow_copies"],
+                "swap_in_bytes": int(ks["swap_in_pages"] * self._page_bytes),
+                "swap_out_bytes": int(ks["swap_out_pages"]
+                                      * self._page_bytes)}
 
-    def _prefill_phase(self) -> tuple[int, float]:
+    def _prefill_phase(self, live_bc: int = 0) -> tuple[int, float]:
         """Advance this tick's prefill chunks (FCFS, budget-bounded);
         returns (tokens, token-weighted mean context) for the tick's fused
         latency charge.  The chunks are co-batched with the decode dispatch
@@ -472,11 +630,12 @@ class SimBackend:
         self.last_prefill_plan = []
         if not self._prefill.queue:
             return 0, 0.0
-        plan = self._prefill.plan()
+        plan = self._prefill.plan(live_bc)
         tokens = sum(n for _, _, n in plan)
         ctx = sum((off + n / 2) * n for _, off, n in plan) / max(tokens, 1)
         for req, off, n in plan:
-            self._prefill.advance(req.rid, n)
+            if self._prefill.advance(req.rid, n):
+                self._register(req)
         self.prefill_tokens_history.append(tokens)
         self.last_prefill_plan = [(req.rid, off, n) for req, off, n in plan]
         self.host_transfer_bytes += 16 * len(plan)  # [B] conf/argmax scalars
@@ -520,9 +679,21 @@ class SimBackend:
             eff_chunks.append(int(valid[i]))
 
     def decode_step(self, rids, chunk: int):
-        pf_tokens, pf_ctx = self._prefill_phase()
+        live_b = sum(1 for r in rids if not self._prefill.pending(r))
+        pf_tokens, pf_ctx = self._prefill_phase(live_b * chunk)
         decode_rids = [r for r in rids if not self._prefill.pending(r)]
         if self.kv_admission == "incremental" and decode_rids:
+            if self.prefix_cache:
+                # COW before the step's first write can land in a shared
+                # (or parked-registered) page; no-op for private tables
+                for rid in decode_rids:
+                    st = self._states[rid]
+                    if not st.done:
+                        lo = st.prompt_len + st.frozen
+                        if isinstance(st, ARState):
+                            lo -= 1      # AR rewrites its last position
+                        self.kv.ensure_private(
+                            rid, lo, _worst_step_len(st, chunk))
             # transactional worst-case reservation BEFORE any state mutates
             _reserve_step(self.kv, self._states, decode_rids, chunk)
         infos = {}
@@ -647,7 +818,8 @@ class ModelBackend:
                  attn_impl: str | None = None, interpret: bool | None = None,
                  prefill_mode: str = "chunked",
                  prefill_token_budget: int | None = None,
-                 kv_shards: int = 1):
+                 kv_shards: int = 1, prefix_cache: bool = True,
+                 host_kv_pages: int = 0):
         import functools
 
         import jax
@@ -713,8 +885,25 @@ class ModelBackend:
                                      dtype=cache_dtype)
             self._table_width = self.kv.pages_for(max_len)
             self._n_attn_layers = model.paged_kv_dims()[0]
-            self._prefill = PrefillScheduler(prefill_token_budget,
-                                             _prefill_align(ps, self.cfg))
+            # cost-model stand-in for swap-vs-recompute and adaptive
+            # prefill sizing (the model path runs on the host)
+            from repro.core.latency_model import CPU_HOST
+            self._analytic = AnalyticDeviceModel(self.cfg, CPU_HOST)
+            align = _prefill_align(ps, self.cfg)
+            target_bc = None
+            if prefill_token_budget is None and prefill_mode == "chunked":
+                target_bc = int(min(max(self._analytic.saturation_ew(),
+                                        align), 8192))
+            self._prefill = PrefillScheduler(prefill_token_budget, align,
+                                             target_bc=target_bc)
+            self._prefix_align = align
+            self.prefix_cache = prefix_cache
+            if host_kv_pages:
+                self.kv.attach_host(host_kv_pages)
+            self._page_bytes = self.kv.page_bytes
+            self.prefix_hits = 0
+            self.prefix_misses = 0
+            self.prefix_hit_tokens = 0
             impl = attn_impl if attn_impl is not None \
                 else self.cfg.paged_attn_impl
             # DONATION CONTRACT: every jit below that takes the page-pool
@@ -746,6 +935,7 @@ class ModelBackend:
                     "retired — ModelBackend serves attention-only families "
                     "through the paged KV pool (drop paged=False)")
             self.kv = None
+            self.prefix_cache = False
             self.cache = model.init_cache(n_slots, max_len, dtype=cache_dtype)
             self._slot_of: dict[int, int] = {}
             self._free_slots = list(range(n_slots - 1, -1, -1))
@@ -797,9 +987,36 @@ class ModelBackend:
         return self.jax.tree.map(one, old_states, new_states)
 
     # ------------------------------------------------------------------
+    def _prefix_lookup(self, req: Request):
+        """Admission-time prefix match (chunked mode only: the wave flush
+        always re-prefills whole prompts from offset 0, which would
+        rewrite attached shared pages).  Host-tier chain pages swap back
+        only when the transfer beats recomputing their tokens."""
+        if not self.prefix_cache or req.prompt_tokens is None \
+                or self.prefill_mode != "chunked":
+            return None
+        m = self.kv.lookup_prefix(req.prompt_tokens, req.prompt_len,
+                                  align=self._prefix_align)
+        if m is not None and m.n_host:
+            swap_s = m.n_host * self._page_bytes \
+                / self._analytic.device.host_bw
+            re_s = self._analytic.step_latency(
+                1, m.n_host * self.kv.page_size, ctx=m.covered / 2)
+            if swap_s >= re_s:
+                m = m.device_only(self._prefix_align)
+        return m
+
     def admit_pages(self, req: Request) -> int:
-        """Pages claimed at admission (prompt-only incremental growth)."""
-        return self.kv.pages_for(req.prompt_len) if self.paged else 0
+        """Pages claimed at admission (prompt-only incremental growth,
+        net of prefix hits — attached device pages cost nothing)."""
+        if not self.paged:
+            return 0
+        if self.kv.is_spilled(req.rid):
+            return self.kv.spilled_pages(req.rid)
+        m = self._prefix_lookup(req)
+        if m is not None:
+            return self.kv.pages_for(req.prompt_len) - m.n_device
+        return self.kv.pages_for(req.prompt_len)
 
     def can_admit(self, req: Request) -> bool:
         total = req.prompt_len + req.max_new_tokens
@@ -807,8 +1024,14 @@ class ModelBackend:
             return False
         if self.paged:
             # prompt pages free now; full footprint must fit the pool ever
-            return (self.kv.pages_for(total) <= self.kv.n_pages
-                    and self.kv.can_admit(req.prompt_len))
+            if self.kv.pages_for(total) > self.kv.n_pages:
+                return False
+            if self.kv.is_spilled(req.rid):
+                return self.kv.can_swap_in(req.rid)
+            m = self._prefix_lookup(req)
+            if m is not None:
+                return self.kv.can_admit_prefix(req.prompt_len, m)
+            return self.kv.can_admit(req.prompt_len)
         return bool(self._free_slots)
 
     def _make_state(self, req: Request):
@@ -824,6 +1047,12 @@ class ModelBackend:
 
     def admit(self, req: Request) -> float:
         self._req[req.rid] = req
+        if self.paged and self.kv.is_spilled(req.rid):
+            # spill-resume: the decode state was retained at spill time;
+            # one batched host→device scatter restores the exact KV, so
+            # decoding continues where preemption stopped it
+            self.kv.swap_in_request(req.rid)
+            return 0.0
         self._states[req.rid] = st = self._make_state(req)
         if self.paged:
             # claim the prompt's pages only; decode steps grow the table
@@ -831,8 +1060,25 @@ class ModelBackend:
             # decode loop: the whole wave in one forward (wave mode), or
             # budget-bounded page-aligned chunks interleaved with decode
             # dispatches (chunked mode).
-            self.kv.allocate(req.rid, req.prompt_len)
-            self._prefill.add(req)
+            m = self._prefix_lookup(req)
+            if m is not None:
+                self.kv.allocate_prefix(req.rid, req.prompt_len, m)
+                self.prefix_hits += 1
+                self.prefix_hit_tokens += m.covered
+                start = m.covered
+                if isinstance(st, ARState) and start >= req.prompt_len:
+                    # AR's first token comes from the prefill head at the
+                    # last prompt position, so keep (exactly) that token
+                    # in the plan — its KV rewrite into a shared page goes
+                    # through COW and lands bit-identical values
+                    start = req.prompt_len - 1
+                self._prefill.add(req, start=start)
+            else:
+                if self.prefix_cache and req.prompt_tokens is not None \
+                        and self.prefill_mode == "chunked":
+                    self.prefix_misses += 1
+                self.kv.allocate(req.rid, req.prompt_len)
+                self._prefill.add(req)
             return 0.0
 
         jnp = self.jnp
@@ -858,7 +1104,10 @@ class ModelBackend:
             # re-admission restarts prefill at offset 0, and none of the
             # completed chunks were ever banked as decode work
             self._prefill.remove(rid)
-            self.kv.free(rid)
+            if self.kv.is_spilled(rid):
+                self.kv.discard_spilled(rid)
+            else:
+                self.kv.free(rid)
             self._states.pop(rid)
             self._req.pop(rid)
             return
@@ -879,6 +1128,26 @@ class ModelBackend:
         self._free_slots.append(slot)
         self._states.pop(rid)
         self._req.pop(rid)
+
+    def spill(self, rid: int) -> bool:
+        """Preempt→spill to the host tier (see :meth:`SimBackend.spill`):
+        decode state is retained and re-admission swaps the exact KV bytes
+        back, so the resumed trajectory is bit-identical to an
+        uninterrupted run.  False → caller uses the discard path."""
+        if not self.paged or self.kv.host is None \
+                or self._prefill.pending(rid) or self.kv.is_spilled(rid):
+            return False
+        st = self._states.get(rid)
+        if st is None:
+            return False
+        toks = st.prompt_len + st.frozen
+        swap_s = swap_cost_s(self.kv.table_len(rid),
+                             self._page_bytes or 1.0,
+                             self._analytic.device)
+        re_s = self._analytic.step_latency(1, toks, ctx=toks / 2)
+        if swap_s >= re_s:
+            return False
+        return self.kv.spill_request(rid) is not None
 
     def state(self, rid: int):
         return self._states[rid]
@@ -901,7 +1170,7 @@ class ModelBackend:
         backlog = self._prefill.backlog
         if self.prefill_mode == "wave":
             return backlog
-        return min(self._prefill.budget, backlog)
+        return min(self._prefill.tick_budget(), backlog)
 
     def decode_batch_size(self, rids) -> int:
         """Requests the next decode dispatch will actually include —
@@ -1010,14 +1279,19 @@ class ModelBackend:
         self.last_prefill_plan = [(r.rid, 0, r.prompt_len) for r in reqs]
         return fresh
 
-    def _chunked_prefill_tick(self) -> set:
-        """Chunked mode: one dispatch advancing up to ``budget`` prompt
-        tokens of prefill cursors (FCFS, page-aligned chunk ends).  Returns
-        rids whose prompt completed this tick AND received their
+    def _chunked_prefill_tick(self, live_bc: int = 0) -> set:
+        """Chunked mode: one dispatch advancing up to this tick's budget in
+        prompt tokens of prefill cursors (FCFS, page-aligned chunk ends).
+        Returns rids whose prompt completed this tick AND received their
         prefill-derived first token (AR)."""
-        plan = self._prefill.plan()
+        plan = self._prefill.plan(live_bc)
         if not plan:
             return set()
+        if self.prefix_cache:
+            # COW before the chunk scatter can land in a shared page (the
+            # AR last-prompt-token re-prefill after a full-coverage hit)
+            for req, off, n in plan:
+                self.kv.ensure_private(req.rid, off, off + n)
         jnp = self.jnp
         B = len(plan)
         Bp = self._bucket(B)
@@ -1054,17 +1328,22 @@ class ModelBackend:
                 if isinstance(st, ARState):
                     st.commit(int(tok[i]))
                     fresh.add(req.rid)
+                if self.prefix_cache:
+                    # the prompt's pages now hold exactly the KV a fresh
+                    # prefill would write — index them for reuse
+                    self.kv.register_prefix(req.rid, req.prompt_tokens,
+                                            limit=req.prompt_len)
         self.prefill_tokens_history.append(sum(n for _, _, n in plan))
         self.last_prefill_plan = [(req.rid, off, n) for req, off, n in plan]
         return fresh
 
-    def _prefill_tick(self) -> set:
+    def _prefill_tick(self, live_bc: int = 0) -> set:
         self.last_prefill_plan = []
         if not self._prefill.queue:
             return set()
         if self.prefill_mode == "wave":
             return self._flush_prefills()
-        return self._chunked_prefill_tick()
+        return self._chunked_prefill_tick(live_bc)
 
     def telemetry_counters(self) -> dict:
         """Cumulative counters the tracer samples once per tick."""
@@ -1077,6 +1356,16 @@ class ModelBackend:
             out["prefill_backlog"] = self._prefill.backlog
             out["prefill_tick_tokens"] = self.last_prefill_plan \
                 and sum(n for _, _, n in self.last_prefill_plan) or 0
+            ks = self.kv.stats
+            out["prefix_hits"] = self.prefix_hits
+            out["prefix_misses"] = self.prefix_misses
+            out["prefix_hit_tokens"] = self.prefix_hit_tokens
+            out["pages_shared"] = self.kv.pages_shared
+            out["cow_copies"] = ks["cow_copies"]
+            out["swap_in_bytes"] = int(ks["swap_in_pages"]
+                                       * self._page_bytes)
+            out["swap_out_bytes"] = int(ks["swap_out_pages"]
+                                        * self._page_bytes)
         return out
 
     def _dispatch_window(self, rids, win, start, valid, n_adv):
@@ -1178,12 +1467,25 @@ class ModelBackend:
     def decode_step(self, rids, chunk: int):
         infos: dict[int, StepInfo] = {}
         if self.paged:
-            fresh = self._prefill_tick()
+            live_b = sum(1 for r in rids if not self._prefill.pending(r))
+            fresh = self._prefill_tick(live_b * chunk)
             # requests whose prompt is still mid-prefill sit this decode
             # dispatch out; ones whose last chunk just landed join it
             ready = [r for r in rids if not self._prefill.pending(r)]
             ar_rids, diff_rids = self._split_ar(ready, infos)
             live = ar_rids + diff_rids
+            if self.prefix_cache:
+                # decode writes land past the committed frontier; COW any
+                # shared page the worst-case window can touch before the
+                # donated scatter mutates the pool in place
+                for r in live:
+                    st = self._states[r]
+                    if st.done:
+                        continue
+                    lo = st.prompt_len + st.frozen
+                    if isinstance(st, ARState):
+                        lo -= 1
+                    self.kv.ensure_private(r, lo, _worst_step_len(st, chunk))
             if live:
                 # worst-case page reservation; transactional OutOfPages
                 # (nothing mutated yet) lets the engine preempt + retry

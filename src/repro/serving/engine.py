@@ -439,26 +439,25 @@ class EngineCore:
 
     # -- preemption (cluster or memory KV-pressure relief) -----------------
     def preempt(self, rid: int, reason: str = "cluster") -> bool:
-        """Evict an active request: release its backend state (freeing its
-        KV pages) and requeue it for re-admission — it re-prefills from
-        scratch, losing decode progress (Fan et al.'s evict+recompute).
+        """Evict an active request.  When the backend has a host KV tier
+        and its cost model says the transfer wins, the pages are *spilled*
+        (``backend.spill``): decode state survives, re-admission swaps the
+        pages back in, and no work is discarded.  Otherwise fall back to
+        evict+recompute (Fan et al.): release the backend state, requeue,
+        and re-prefill from scratch.
 
         Bookkeeping: TTFT stays measured from the request's FIRST admission
-        (the user saw that token; eviction doesn't un-serve it), while the
-        recompute cost is not free — the banked ``computed_tokens`` /
-        ``decode_steps`` keep the discarded work in token-utilization, and
-        re-admission charges the re-prefill latency to the replica clock
-        through ``backend.admit`` like any other prefill."""
+        (the user saw that token; eviction doesn't un-serve it).  On the
+        discard path the banked ``computed_tokens`` / ``decode_steps`` keep
+        the wasted work in token-utilization and re-admission charges the
+        re-prefill latency through ``backend.admit``; on the spill path
+        nothing is banked (nothing is recomputed) and re-admission charges
+        only the swap-in transfer time."""
         for i, req in enumerate(self._active):
             if req.rid == rid:
                 self._active.pop(i)
                 st = self.backend.state(rid)
                 m = self._metrics[rid]
-                # bank the wasted compute so token_utilization reflects the
-                # recompute cost of eviction
-                m.computed_tokens += st.computed_tokens
-                m.decode_steps += st.steps
-                m.preemptions += 1
                 kv = getattr(self.backend, "kv", None)
                 pages = 0
                 if kv is not None:
@@ -466,12 +465,22 @@ class EngineCore:
                         pages = kv.table_len(rid)
                     except KeyError:
                         pages = 0
+                spill_fn = getattr(self.backend, "spill", None)
+                spilled = bool(spill_fn and spill_fn(rid))
+                if not spilled:
+                    # bank the wasted compute so token_utilization reflects
+                    # the recompute cost of eviction
+                    m.computed_tokens += st.computed_tokens
+                    m.decode_steps += st.steps
+                m.preemptions += 1
                 self.tracer.req("preempt", rid, self.clock.now(),
                                 self.replica, reason=reason,
                                 pages_freed=pages,
                                 n_committed=st.n_committed,
+                                spilled=spilled,
                                 preemptions=m.preemptions)
-                self.backend.release(rid)
+                if not spilled:
+                    self.backend.release(rid)
                 self.preemptions += 1
                 self.submit(req)
                 return True

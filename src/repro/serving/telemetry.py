@@ -40,7 +40,10 @@ CLI ``python -m repro.launch.trace_view`` consumes this) and
 https://ui.perfetto.dev — one process per replica with a tick track,
 request async spans, and counter tracks for ``kv_util``, ``bc``,
 ``prefill_backlog``, ``pages_in_use``, ``host_transfer_bytes``,
-``dispatches``, ``max_itl``, and — for sharded page pools — per-device
+``dispatches``, ``max_itl``, the prefix-cache / tiered-KV series
+(``prefix_hits``/``prefix_misses``/``prefix_hit_tokens``,
+``pages_shared``, ``cow_copies``, ``swap_in_bytes``/``swap_out_bytes``),
+and — for sharded page pools — per-device
 ``device_dispatches`` / ``collective_bytes`` plus one
 ``pages_in_use/shard<i>`` track per KV shard).
 :func:`validate_trace_events` is an in-repo catapult-format checker used
@@ -93,7 +96,13 @@ NULL_TRACER = NullTracer()
 COUNTER_FIELDS = ("kv_util", "bc", "prefill_backlog", "pages_in_use",
                   "host_transfer_bytes", "decode_dispatches",
                   "prefill_dispatches", "device_dispatches",
-                  "collective_bytes", "max_itl")
+                  "collective_bytes", "max_itl",
+                  # prefix-cache / tiered-KV tracks (PR 8): cumulative
+                  # hit/miss counts, live shared-page gauge, COW copies and
+                  # host-tier swap traffic in bytes
+                  "prefix_hits", "prefix_misses", "prefix_hit_tokens",
+                  "pages_shared", "cow_copies", "swap_in_bytes",
+                  "swap_out_bytes")
 
 
 class Tracer:
@@ -297,6 +306,13 @@ def _tick_counters(rec: dict):
         "device_dispatches": counters.get("device_dispatches"),
         "collective_bytes": counters.get("collective_bytes"),
         "max_itl": rec.get("max_itl"),
+        "prefix_hits": counters.get("prefix_hits"),
+        "prefix_misses": counters.get("prefix_misses"),
+        "prefix_hit_tokens": counters.get("prefix_hit_tokens"),
+        "pages_shared": counters.get("pages_shared"),
+        "cow_copies": counters.get("cow_copies"),
+        "swap_in_bytes": counters.get("swap_in_bytes"),
+        "swap_out_bytes": counters.get("swap_out_bytes"),
     }
     out = [(name, v) for name in COUNTER_FIELDS
            if (v := vals.get(name)) is not None]

@@ -221,9 +221,91 @@ class RateVaryingWorkload:
         return len(self.requests)
 
 
+class SharedPrefixWorkload:
+    """Multi-turn / shared-prefix trace with *real* prompt token ids.
+
+    Production DLLM traffic shares page-aligned prompt heads: system
+    prompts and few-shot templates (cross-request sharing) and multi-turn
+    history (a follow-up's prompt is the previous prompt + the assistant
+    reply + the new user turn).  This generator models both:
+
+    * a pool of ``n_prefixes`` synthetic system prompts; a ``share_ratio``
+      fraction of requests prepends one (zipf-ish: prompt 0 is the most
+      popular),
+    * with probability ``turn_ratio`` a request *continues* an earlier
+      conversation — its prompt extends the parent's prompt with the
+      parent's (synthetic) reply plus a fresh user turn, so the whole
+      parent prompt is a reusable prefix.  Continuations arrive after
+      their parent (arrival order preserved), up to ``max_turns`` deep.
+
+    Token ids are deterministic in ``seed`` and drawn from
+    ``[0, vocab)``; a prefix-cache-aware backend can hash them, and a
+    cache-off run sees identical shapes/arrivals — only reuse differs.
+    """
+
+    def __init__(self, profile: DatasetProfile, rate: float, n_requests: int,
+                 seed: int = 0, share_ratio: float = 0.8,
+                 turn_ratio: float = 0.4, n_prefixes: int = 4,
+                 prefix_len: int = 256, max_turns: int = 4,
+                 vocab: int = 32000, max_prompt: int = 8192,
+                 max_output: int = 2048):
+        self.profile = profile
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / rate, n_requests)
+        arrivals = np.cumsum(gaps)
+        pool = [rng.integers(1, vocab, size=prefix_len).tolist()
+                for _ in range(max(n_prefixes, 1))]
+        # conversations eligible for continuation: (prompt_tokens, depth)
+        open_convs: list[tuple[list, int]] = []
+        reqs = []
+        for i, at in enumerate(arrivals):
+            o = int(np.clip(rng.normal(profile.output_mean,
+                                       profile.output_std), 4, max_output))
+            parent = None
+            if open_convs and rng.random() < turn_ratio:
+                j = int(rng.integers(len(open_convs)))
+                parent = open_convs[j]
+                if parent[1] + 1 >= max_turns:
+                    open_convs.pop(j)
+            if parent is not None:
+                prev_toks, depth = parent
+                reply = rng.integers(1, vocab, size=max(o // 2, 8)).tolist()
+                turn = rng.integers(
+                    1, vocab,
+                    size=int(np.clip(rng.normal(profile.input_mean / 2,
+                                                profile.input_std / 2),
+                                     8, max_prompt))).tolist()
+                toks = (prev_toks + reply + turn)[:max_prompt]
+                depth += 1
+            else:
+                body = rng.integers(
+                    1, vocab,
+                    size=int(np.clip(rng.normal(profile.input_mean,
+                                                profile.input_std),
+                                     8, max_prompt))).tolist()
+                if rng.random() < share_ratio:
+                    k = min(int(rng.zipf(1.5)) - 1, len(pool) - 1)
+                    toks = (pool[k] + body)[:max_prompt]
+                else:
+                    toks = body[:max_prompt]
+                depth = 0
+            reqs.append(Request(rid=i, arrival_time=float(at),
+                                prompt_len=len(toks), max_new_tokens=o,
+                                prompt_tokens=toks, dataset=profile.name))
+            if depth + 1 < max_turns:
+                open_convs.append((toks, depth))
+        self.requests = reqs
+
+    def __iter__(self):
+        return iter(self.requests)
+
+    def __len__(self):
+        return len(self.requests)
+
+
 def make_trace(profile: DatasetProfile, kind: str, rate: float,
                n_requests: int, seed: int = 0, **kw):
-    """Factory for the CLI/benchmarks: poisson | bursty | diurnal."""
+    """Factory for the CLI/benchmarks: poisson | bursty | diurnal | shared."""
     if kind == "poisson":
         return PoissonWorkload(profile, rate, n_requests, seed=seed, **kw)
     if kind == "bursty":
@@ -232,6 +314,8 @@ def make_trace(profile: DatasetProfile, kind: str, rate: float,
     if kind == "diurnal":
         return RateVaryingWorkload(profile, diurnal_rate(rate), n_requests,
                                    seed=seed, **kw)
+    if kind == "shared":
+        return SharedPrefixWorkload(profile, rate, n_requests, seed=seed, **kw)
     raise ValueError(f"unknown trace kind {kind!r}")
 
 
