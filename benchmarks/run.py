@@ -583,6 +583,29 @@ def kv_reuse(quick=False):
          "full curves in BENCH_kv_reuse.json")
 
 
+def fault_tolerance(quick=False):
+    """Goodput under replica failure: migration + health routing vs naive
+    re-submission → BENCH_fault_tolerance.json
+    (see benchmarks/fault_tolerance_bench)."""
+    from benchmarks.fault_tolerance_bench import run_bench
+    payload = run_bench(quick=quick, verbose=False)
+    s = payload["summary"]
+    emit("fault_tolerance.migration_goodput_gain",
+         f"{s['migration_goodput_gain']:.3f}x",
+         f"recover vs naive under the same crash+stall plan; "
+         f"ceiling fraction {s['recover_vs_ceiling']:.3f}")
+    emit("fault_tolerance.recover_beats_naive",
+         str(s["recover_beats_naive"]).lower(),
+         "strictly higher goodput AND strictly fewer lost tokens")
+    emit("fault_tolerance.lost_tokens",
+         f"{s['lost_tokens_recover']} vs {s['lost_tokens_naive']}",
+         "committed tokens wiped: recover vs naive")
+    emit("fault_tolerance.recovery_lag_ms",
+         f"{s['recovery_lag_ms']:.0f}",
+         f"fault instant to last displaced finish; "
+         f"{s['migrations']} migrations")
+
+
 def telemetry(quick=False):
     """Tracer overhead: traced vs untraced cluster sweep cells →
     BENCH_telemetry.json (see benchmarks/telemetry_overhead)."""
@@ -621,6 +644,7 @@ ALL = {
     "prefill_interleave": prefill_interleave,
     "telemetry": telemetry,
     "kv_reuse": kv_reuse,
+    "fault_tolerance": fault_tolerance,
 }
 
 

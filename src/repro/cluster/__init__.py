@@ -4,18 +4,22 @@ event loop over steppable :class:`~repro.serving.engine.EngineCore` replicas.
 """
 
 from repro.cluster.admission import (KVAdmissionPolicy, admission_pages,
-                                     fits_ever, kv_tokens)
+                                     fits_ever, kv_tokens, service_floor)
 from repro.cluster.engine import ClusterEngine
 from repro.cluster.factory import (build_model_cluster, build_sim_cluster,
                                    make_replica_scheduler)
-from repro.cluster.router import (ROUTERS, JoinShortestQueueRouter,
-                                  RoundRobinRouter, SaturationAwareRouter,
-                                  make_router)
+from repro.cluster.health import HealthMonitor, RecoveryPolicy
+from repro.cluster.router import (ROUTERS, HealthAwareRouter,
+                                  JoinShortestQueueRouter, RoundRobinRouter,
+                                  SaturationAwareRouter, make_router)
+from repro.common.faults import FaultEvent, FaultPlan
 
 __all__ = [
     "ClusterEngine", "KVAdmissionPolicy", "admission_pages", "fits_ever",
-    "kv_tokens",
+    "kv_tokens", "service_floor",
     "RoundRobinRouter", "JoinShortestQueueRouter", "SaturationAwareRouter",
+    "HealthAwareRouter", "HealthMonitor", "RecoveryPolicy",
+    "FaultPlan", "FaultEvent",
     "ROUTERS", "make_router", "build_sim_cluster", "build_model_cluster",
     "make_replica_scheduler",
 ]

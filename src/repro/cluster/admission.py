@@ -57,6 +57,26 @@ def fits_ever(core, req: Request) -> bool:
     return True
 
 
+def service_floor(core, req: Request) -> float:
+    """Optimistic lower bound on ``req``'s total service time on ``core``:
+    a b=1 prefill forward plus decode assuming *every* window token of the
+    best candidate chunk commits every step.  Real runs are strictly
+    slower (batching queue, partial commits, preemptions), so deadline
+    shedding against this floor only drops requests that cannot make
+    their deadline even in the best case — it never sheds feasible work.
+    Fixed-chunk baselines without a latency model return 0 (never shed on
+    service time, only on a deadline already in the past)."""
+    sched = getattr(core, "scheduler", None)
+    lm = getattr(sched, "latency_model", None)
+    if lm is None:
+        return 0.0
+    cands = getattr(sched, "candidates", None) or (1,)
+    prefill = lm.predict_bc(req.prompt_len) if req.prompt_len > 0 else 0.0
+    decode = min(-(-req.max_new_tokens // c) * lm.predict_bc(c)
+                 for c in cands)
+    return prefill + decode
+
+
 @dataclass
 class KVAdmissionPolicy:
     """Admit onto a replica only if, after reserving admission pages for

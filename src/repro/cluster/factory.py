@@ -37,6 +37,11 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                       kv_shards: int = 1,
                       prefix_cache: bool = True,
                       host_kv_pages: int = 0,
+                      fault_plan=None,
+                      recovery=None,
+                      health=None,
+                      max_spill_retries: int | None = None,
+                      commit_calib_seed: int | None = None,
                       tracer=None
                       ) -> ClusterEngine:
     """N independent SimBackend+scheduler replicas (per-replica RNG seeds,
@@ -48,6 +53,12 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
     instead of charging each admission's whole prompt synchronously."""
     if isinstance(router, str):
         router = make_router(router)
+    if commit_calib_seed is None and fault_plan is not None:
+        # replicas serve the same "model": share the commit-curve
+        # calibration so a migrated request resumes the exact trajectory
+        # its source replica would have produced (per-request sampling
+        # streams still travel with the migration ticket)
+        commit_calib_seed = seed
     replicas = []
     for i in range(n_replicas):
         be = SimBackend(cfg, device,
@@ -59,7 +70,8 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
                         prefill_token_budget=prefill_token_budget,
                         kv_shards=kv_shards,
                         prefix_cache=prefix_cache,
-                        host_kv_pages=host_kv_pages)
+                        host_kv_pages=host_kv_pages,
+                        commit_calib_seed=commit_calib_seed)
         sch = make_replica_scheduler(be, profile, mode)
         core = EngineCore(be, sch, max_batch=max_batch, tracer=tracer)
         core.replica = i
@@ -67,7 +79,10 @@ def build_sim_cluster(cfg, profile, n_replicas: int, router, *,
     return ClusterEngine(replicas, router,
                          admission=KVAdmissionPolicy(
                              low_watermark=kv_watermark),
-                         enable_preemption=preemption, tracer=tracer)
+                         enable_preemption=preemption, tracer=tracer,
+                         fault_plan=fault_plan, recovery=recovery,
+                         health=health,
+                         max_spill_retries=max_spill_retries)
 
 
 def build_model_cluster(model, params, n_replicas: int, router, *, profile,
@@ -80,6 +95,11 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
                         prefill_mode: str = "chunked",
                         prefill_token_budget: int | None = None,
                         kv_shards: int = 1,
+                        prefix_cache: bool = True,
+                        host_kv_pages: int = 0,
+                        fault_plan=None,
+                        recovery=None,
+                        max_spill_retries: int | None = None,
                         tracer=None
                         ) -> ClusterEngine:
     """N real-model replicas (shared params, per-replica KV pool) under one
@@ -96,7 +116,9 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
                           kv_pages=kv_pages, page_size=page_size,
                           prefill_mode=prefill_mode,
                           prefill_token_budget=prefill_token_budget,
-                          kv_shards=kv_shards)
+                          kv_shards=kv_shards,
+                          prefix_cache=prefix_cache,
+                          host_kv_pages=host_kv_pages)
         sch = scheduler_for_mode(
             mode, AnalyticDeviceModel(model.cfg, CPU_HOST),
             prior_tokens_per_step=profile.tokens_per_step_bd32,
@@ -109,4 +131,6 @@ def build_model_cluster(model, params, n_replicas: int, router, *, profile,
     return ClusterEngine(replicas, router,
                          admission=KVAdmissionPolicy(
                              low_watermark=kv_watermark),
-                         enable_preemption=preemption, tracer=tracer)
+                         enable_preemption=preemption, tracer=tracer,
+                         fault_plan=fault_plan, recovery=recovery,
+                         max_spill_retries=max_spill_retries)

@@ -132,6 +132,44 @@ class SaturationAwareRouter:
                                      replicas[i].queue_depth, i))
 
 
+class HealthAwareRouter:
+    """Wrapper adding a health filter + penalty sort to any inner router.
+
+    Replicas the monitor marks down/failing are dropped from the ranking
+    entirely; the rest keep the inner router's relative order within each
+    health class (healthy first, then rewarming, then degraded) — so a
+    saturation-aware inner ranking still decides among healthy peers, and
+    a rewarming replica only sees traffic when every healthy replica is a
+    worse pick or the hysteresis depth gate admits it.  The monitor is
+    wired in by the cluster engine (it owns the fault timeline); without
+    one the wrapper is transparent.
+    """
+
+    def __init__(self, inner, monitor=None):
+        self.inner = inner
+        self.monitor = monitor
+        self.name = f"health:{inner.name}"
+        self._now = 0.0              # stamped by the cluster each event
+
+    def observe(self, now: float):
+        self._now = max(self._now, now)
+
+    def rank(self, replicas, req):
+        order = self.inner.rank(replicas, req)
+        if self.monitor is None:
+            return order
+        now = self._now
+        pos = {idx: p for p, idx in enumerate(order)}
+        return sorted(
+            (i for i in order if self.monitor.routable(i, now)),
+            key=lambda i: (self.monitor.penalty(i, now), pos[i]))
+
+    def placed(self, idx, n_replicas):
+        fn = getattr(self.inner, "placed", None)
+        if fn is not None:
+            fn(idx, n_replicas)
+
+
 ROUTERS = {
     "round_robin": RoundRobinRouter,
     "rr": RoundRobinRouter,
@@ -141,8 +179,13 @@ ROUTERS = {
 
 
 def make_router(name: str):
+    """``make_router("jsq")`` or, wrapped with the health filter,
+    ``make_router("health:jsq")`` (the cluster engine wires the monitor)."""
+    if name.startswith("health:"):
+        return HealthAwareRouter(make_router(name[len("health:"):]))
     try:
         return ROUTERS[name]()
     except KeyError:
         raise ValueError(f"unknown router {name!r}; "
-                         f"choose from {sorted(set(ROUTERS))}")
+                         f"choose from {sorted(set(ROUTERS))} "
+                         f"(optionally prefixed with 'health:')")

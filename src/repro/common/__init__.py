@@ -1,0 +1,6 @@
+"""Infrastructure shared between the training and serving stacks."""
+
+from repro.common.faults import (FailureInjector, FaultEvent, FaultPlan,
+                                 SimulatedFailure)
+
+__all__ = ["FailureInjector", "FaultEvent", "FaultPlan", "SimulatedFailure"]

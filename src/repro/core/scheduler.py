@@ -51,6 +51,18 @@ class ElasticScheduler:
     # aggressive cap and no cap on goodput at moderate pool pressure.
     memory_lo: float = 0.9
     memory_hi: float = 1.0
+    # Failover mode: while a replica is absorbing migrated/re-submitted
+    # requests after a fault, the engine passes ``conservative=True`` and
+    # the scheduler evaluates the memory knee at
+    # ``kv_util + failover_margin`` instead of ``kv_util``.  Big
+    # speculative chunks claim big per-step page reservations; right after
+    # a failover the pool is absorbing the dead replica's working set, so
+    # the knee bites a margin early — trimming the spike exactly when it
+    # could OutOfPages-preempt the very requests being rescued, while a
+    # pool with headroom keeps serving at full chunk.  ``conservative_cap``
+    # remains as an optional operator hard cap on top.
+    failover_margin: float = 0.15
+    conservative_cap: int | None = None
     _current: int = field(default=0, init=False)
     history: list = field(default_factory=list, init=False)
     # Decision log for telemetry: every ``select`` records its inputs AND
@@ -89,20 +101,27 @@ class ElasticScheduler:
         return cands[len(cands) - 1 - steps_down]
 
     def select(self, b: int, kv_util: float | None = None,
-               prefill_tokens: int = 0) -> int:
+               prefill_tokens: int = 0, conservative: bool = False) -> int:
         """Pick the chunk size for the next iteration given live batch b,
-        (optionally) the KV allocator's utilization in [0, 1], and the
-        prompt tokens of chunked-prefill work sharing the tick."""
+        (optionally) the KV allocator's utilization in [0, 1], the prompt
+        tokens of chunked-prefill work sharing the tick, and whether the
+        engine is draining a failover backlog (``conservative``)."""
         if b <= 0:
             best = max(self.candidates)
             self.last_decision = {
                 "policy": "elastic", "b": b, "kv_util": kv_util,
                 "prefill_tokens": prefill_tokens,
                 "candidates": list(self.candidates), "cap": None,
-                "cur": self._current, "held": False, "tu": {},
+                "cur": self._current, "held": False,
+                "conservative": bool(conservative), "tu": {},
                 "scores": {}, "chunk": best}
             return best
         cap = self.memory_cap(kv_util)
+        if conservative:
+            cap = min(cap, self.memory_cap(
+                (kv_util or 0.0) + self.failover_margin))
+            if self.conservative_cap is not None:
+                cap = min(cap, self.conservative_cap)
         tu, scores = {}, {}
         for c in self.candidates:
             if c > cap:
@@ -122,6 +141,7 @@ class ElasticScheduler:
             "prefill_tokens": prefill_tokens,
             "candidates": list(self.candidates), "cap": cap, "cur": cur,
             "held": bool(held), "hysteresis": self.hysteresis,
+            "conservative": bool(conservative),
             "tu": tu, "scores": scores, "chunk": best}
         self._current = best
         self.history.append((b, best))
@@ -165,7 +185,7 @@ class FixedScheduler:
     last_decision: dict | None = field(default=None, init=False)
 
     def select(self, b: int, kv_util: float | None = None,
-               prefill_tokens: int = 0) -> int:
+               prefill_tokens: int = 0, conservative: bool = False) -> int:
         self.last_decision = {"policy": "fixed", "b": b, "kv_util": kv_util,
                               "prefill_tokens": prefill_tokens,
                               "chunk": self.chunk}

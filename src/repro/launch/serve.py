@@ -29,6 +29,46 @@ def make_scheduler(mode: str, backend, profile):
         prior_tokens_per_step=profile.tokens_per_step_bd32)
 
 
+def run_single_replica_faults(args, profile):
+    """``--faults`` on the sim backend: serve the same workload through a
+    one-replica cluster engine (the fault timeline lives there)."""
+    from repro.cluster import build_sim_cluster
+    from repro.common.faults import FaultPlan
+
+    wl_kw = {"share_ratio": args.share_ratio} \
+        if args.workload == "shared" else {}
+    cluster = build_sim_cluster(
+        get_config(args.arch), profile, 1, "rr",
+        device=DEVICES[args.device], mode=args.mode,
+        kv_pages=args.kv_pages or 1 << 16, max_batch=args.max_batch,
+        seed=args.seed, kv_admission=args.kv_admission,
+        prefill_mode=args.prefill_mode,
+        prefill_token_budget=args.prefill_budget, kv_shards=args.kv_shards,
+        prefix_cache=not args.no_prefix_cache,
+        host_kv_pages=args.host_kv_pages,
+        fault_plan=FaultPlan.parse(args.faults))
+    wl = make_trace(profile, args.workload, args.rate, args.requests,
+                    seed=args.seed, **wl_kw)
+    rep = cluster.run(list(wl))
+    print(f"requests: {len(rep.metrics)}")
+    print(f"decode throughput: {rep.throughput:.1f} tok/s")
+    print(f"P50/P90/P99 TPOT: {rep.tpot_percentile(50)*1e3:.1f} / "
+          f"{rep.tpot_percentile(90)*1e3:.1f} / "
+          f"{rep.tpot_percentile(99)*1e3:.1f} ms")
+    kinds = {}
+    for f in rep.faults:
+        if f["op"] in ("crash", "stall", "oom"):
+            kinds[f["op"]] = kinds.get(f["op"], 0) + 1
+    print("faults applied: " +
+          (" ".join(f"{k}={v}" for k, v in sorted(kinds.items())) or "none"))
+    print(f"re-submissions: {rep.resubmissions}  "
+          f"lost tokens: {rep.lost_tokens}")
+    reasons = rep.reject_reasons()
+    print("rejects: " + (" ".join(f"{k}={v}"
+                                  for k, v in sorted(reasons.items()))
+                         or "none"))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="sdar-8b")
@@ -86,9 +126,19 @@ def main():
                          "and PATH's stem + .perfetto.json (Chrome "
                          "trace_event JSON for ui.perfetto.dev)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="sim backend only: run through a single-replica "
+                         "cluster engine with this deterministic fault "
+                         "schedule (e.g. 'stall@1:r0:dur=0.5:slow=4'); "
+                         "see serve_cluster for multi-replica failover")
     args = ap.parse_args()
 
     profile = DATASETS[args.dataset]
+    if args.faults:
+        if args.backend != "sim":
+            ap.error("--faults requires --backend sim")
+        run_single_replica_faults(args, profile)
+        return
     wl_kw = {"share_ratio": args.share_ratio} \
         if args.workload == "shared" else {}
     if args.backend == "sim":

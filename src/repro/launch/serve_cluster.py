@@ -17,13 +17,41 @@ from __future__ import annotations
 
 import argparse
 
-from repro.cluster import build_sim_cluster
+from repro.cluster import RecoveryPolicy, build_sim_cluster
+from repro.common.faults import FaultPlan
 from repro.configs import get_config
 from repro.core.latency_model import DEVICES
 from repro.serving import DATASETS, Tracer, make_trace
 
 
+def build_fault_plan(args):
+    """``--faults`` spec string, or a seeded random plan from the
+    ``--crash-rate`` / ``--stall-rate`` / ``--oom-rate`` knobs."""
+    if getattr(args, "faults", None):
+        return FaultPlan.parse(args.faults)
+    rates = (getattr(args, "crash_rate", 0.0),
+             getattr(args, "stall_rate", 0.0),
+             getattr(args, "oom_rate", 0.0))
+    if not any(rates):
+        return None
+    horizon = getattr(args, "fault_horizon", None) \
+        or args.requests / max(args.rate, 1e-9)
+    return FaultPlan.random(
+        args.replicas, horizon_s=horizon,
+        seed=getattr(args, "fault_seed", None) or args.seed,
+        crash_rate=rates[0], stall_rate=rates[1], oom_rate=rates[2],
+        warn_s=getattr(args, "fault_warn_s", 0.1))
+
+
 def run_cluster(args, profile, tracer=None):
+    plan = build_fault_plan(args)
+    recovery = None
+    if plan is not None:
+        recovery = RecoveryPolicy(
+            migrate=not getattr(args, "no_migration", False),
+            migration_bw=getattr(args, "migration_bw", 16e9),
+            max_retries=getattr(args, "retry_budget", 8),
+            backoff_s=getattr(args, "retry_backoff_s", 0.0))
     cluster = build_sim_cluster(
         get_config(args.arch), profile, args.replicas, args.router,
         device=DEVICES[args.device], mode=args.mode,
@@ -33,7 +61,8 @@ def run_cluster(args, profile, tracer=None):
         prefill_token_budget=args.prefill_budget,
         kv_shards=args.kv_shards,
         prefix_cache=not getattr(args, "no_prefix_cache", False),
-        host_kv_pages=getattr(args, "host_kv_pages", 0), tracer=tracer)
+        host_kv_pages=getattr(args, "host_kv_pages", 0),
+        fault_plan=plan, recovery=recovery, tracer=tracer)
     wl_kw = {"share_ratio": args.share_ratio} \
         if getattr(args, "share_ratio", None) is not None \
         and args.workload == "shared" else {}
@@ -46,6 +75,11 @@ def run_cluster(args, profile, tracer=None):
         stride = max(int(round(1.0 / frac)), 1)
         for r in wl:
             r.priority = 1 if r.rid % stride == 0 else 0
+    deadline_s = getattr(args, "deadline_s", None)
+    if deadline_s is not None:
+        for r in wl:
+            r.deadline = r.arrival_time + deadline_s
+            r.slo_class = "deadline"
     return cluster.run(wl)
 
 
@@ -109,6 +143,39 @@ def main():
                          "(default 0.25 when --preemption is on, else 0)")
     ap.add_argument("--slo-tpot-ms", type=float, default=50.0)
     ap.add_argument("--seed", type=int, default=0)
+    # -- fault tolerance -------------------------------------------------
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deterministic fault schedule, e.g. "
+                         "'crash@2.5:r1:down=1.0:warn=0.25;"
+                         "stall@1:r0:dur=0.5:slow=4;oom@3:r2:frac=0.5'")
+    ap.add_argument("--crash-rate", type=float, default=0.0,
+                    help="random plan: crashes per replica-second")
+    ap.add_argument("--stall-rate", type=float, default=0.0,
+                    help="random plan: transient stalls per replica-second")
+    ap.add_argument("--oom-rate", type=float, default=0.0,
+                    help="random plan: OutOfPages storms per replica-second")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed for the random fault plan (default: --seed)")
+    ap.add_argument("--fault-horizon", type=float, default=None,
+                    help="random plan horizon in seconds (default: "
+                         "requests/rate)")
+    ap.add_argument("--fault-warn-s", type=float, default=0.1,
+                    help="crash warning lead time (drain window)")
+    ap.add_argument("--no-migration", action="store_true",
+                    help="naive baseline: crashed replicas' requests "
+                         "re-submit from scratch instead of migrating "
+                         "host-spilled state to healthy peers")
+    ap.add_argument("--migration-bw", type=float, default=16e9,
+                    help="host-to-host KV transfer bandwidth (bytes/s)")
+    ap.add_argument("--retry-budget", type=int, default=8,
+                    help="per-request failover/spill retry budget")
+    ap.add_argument("--retry-backoff-s", type=float, default=0.0,
+                    help="exponential backoff base between placement "
+                         "retries of the same request (0 = immediate)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="attach an absolute deadline of arrival + this "
+                         "many seconds to every request (deadline-based "
+                         "load shedding)")
     args = ap.parse_args()
 
     profile = DATASETS[args.dataset]
@@ -132,9 +199,23 @@ def main():
           " ".join(f"r{i}={u*100:.1f}%" for i, u in enumerate(util)))
     print("per-replica routed:      " +
           " ".join(f"r{i}={n}" for i, n in enumerate(rep.route_counts)))
+    reasons = rep.reject_reasons()
+    reason_str = "  ".join(f"{k}={v}" for k, v in sorted(reasons.items())) \
+        or "none"
     print(f"spill-backs: {rep.spills}  preemptions: {rep.preemptions}  "
-          f"rejected (never fit): {len(rep.rejected)}")
+          f"rejected: {len(rep.rejected)} ({reason_str})")
     print(f"token utilization: {rep.token_utilization:.3f}")
+    if rep.faults:
+        kinds = {}
+        for f in rep.faults:
+            if f["op"] in ("crash", "stall", "oom"):
+                kinds[f["op"]] = kinds.get(f["op"], 0) + 1
+        kind_str = " ".join(f"{k}={v}" for k, v in sorted(kinds.items()))
+        print(f"faults applied: {kind_str}  migrations: {rep.migrations} "
+              f"(+{rep.migrations_failed} failed)  "
+              f"re-submissions: {rep.resubmissions}")
+        print(f"lost to failures: {rep.lost_tokens} committed tokens, "
+              f"{rep.lost_computed_tokens} computed tokens")
     if rep.preemptions:
         pi = rep.preemption_impact()
         print(f"preemption SLO impact: {pi['n_preempted']} requests "

@@ -29,8 +29,9 @@ import json
 import sys
 
 from repro.serving.telemetry import (build_spans, decision_summary,
-                                     load_jsonl, phase_attribution,
-                                     ttft_breakdown, validate_trace_events)
+                                     fault_summary, load_jsonl,
+                                     phase_attribution, ttft_breakdown,
+                                     validate_trace_events)
 
 
 def _fmt(v, scale=1.0, unit="", nd=2):
@@ -117,6 +118,25 @@ def print_ttft(tb: dict, spans: dict):
                   f"replica {s['replica']})")
 
 
+def print_faults(fs: dict):
+    if not fs["n_faults"] and not fs["n_shed"] and not fs["n_rejects"]:
+        return
+    print()
+    kinds = " ".join(f"{k}={v}"
+                     for k, v in sorted(fs["faults_by_kind"].items()))
+    print(f"faults & recovery: {fs['n_faults']} injected ({kinds or '-'}), "
+          f"{fs['n_recoveries']} recoveries")
+    if fs["n_migrations"]:
+        print(f"  migrations: {fs['n_migrations']} "
+              f"({fs['n_migrated_finished']} finished), recovery lag "
+              f"{_fmt(fs['recovery_lag_s'], 1e3, ' ms')}")
+    if fs["n_shed"] or fs["n_rejects"]:
+        reasons = " ".join(f"{k}={v}"
+                           for k, v in sorted(fs["reject_reasons"].items()))
+        print(f"  shed: {fs['n_shed']}  rejects: {fs['n_rejects']} "
+              f"({reasons or '-'})")
+
+
 def run_replay(records: list[dict]) -> dict:
     """Replay every logged elastic decision purely from the log; report
     fidelity (in-process tests use ``telemetry.replay_select`` against the
@@ -188,11 +208,12 @@ def main(argv=None):
     ds = decision_summary(records)
     pa = phase_attribution(records)
     tb = ttft_breakdown(spans)
+    fs = fault_summary(records)
     replay = run_replay(records) if args.replay else None
 
     if args.json:
         out = {"decision_summary": ds, "phase_attribution": pa,
-               "ttft_breakdown": tb,
+               "ttft_breakdown": tb, "fault_summary": fs,
                "spans": {str(k): v for k, v in spans.items()}}
         if replay is not None:
             out["replay"] = replay
@@ -208,6 +229,7 @@ def main(argv=None):
         print_phases(pa)
         print()
         print_ttft(tb, spans)
+        print_faults(fs)
         if replay is not None:
             print()
             print(f"decision replay: {replay['n_match']}/"

@@ -8,8 +8,8 @@ from repro.serving.metrics import (ClusterReport, chunk_distribution,
                                    slo_capacity)
 from repro.serving.request import Request, RequestMetrics
 from repro.serving.telemetry import (NULL_TRACER, NullTracer, Tracer,
-                                     load_jsonl, replay_select,
-                                     validate_trace_events)
+                                     fault_summary, load_jsonl,
+                                     replay_select, validate_trace_events)
 from repro.serving.workload import (DATASETS, CommitSimulator, DatasetProfile,
                                     PoissonWorkload, RateVaryingWorkload,
                                     SharedPrefixWorkload, bursty_rate,
@@ -26,6 +26,6 @@ __all__ = [
     "DatasetProfile", "PoissonWorkload", "RateVaryingWorkload",
     "SharedPrefixWorkload", "bursty_rate",
     "diurnal_rate", "fixed_batch_workload", "make_trace",
-    "NULL_TRACER", "NullTracer", "Tracer", "load_jsonl", "replay_select",
-    "validate_trace_events",
+    "NULL_TRACER", "NullTracer", "Tracer", "fault_summary", "load_jsonl",
+    "replay_select", "validate_trace_events",
 ]

@@ -360,7 +360,8 @@ class SimBackend:
                  prefill_mode: str = "wave",
                  prefill_token_budget: int | None = None,
                  kv_shards: int = 1, prefix_cache: bool = True,
-                 host_kv_pages: int = 0):
+                 host_kv_pages: int = 0,
+                 commit_calib_seed: int | None = None):
         """obs_policy: the paper enables out-block streaming only for the
         largest chunk (§7.2) — "large_chunk" applies OBS when the scheduler
         picks chunk == block_size; "off"/"always" override.
@@ -377,7 +378,8 @@ class SimBackend:
         self.cfg = cfg
         self.analytic = AnalyticDeviceModel(cfg, device, n_chips)
         self.sim = CommitSimulator(tokens_per_step, gamma, cfg.block_size,
-                                   cfg.confidence_threshold, seed)
+                                   cfg.confidence_threshold, seed,
+                                   calib_seed=commit_calib_seed)
         self.kv_shards = kv_shards
         self.kv = PagedKVAllocator(kv_pool_pages, page_size,
                                    kv_shards=kv_shards)
@@ -552,7 +554,7 @@ class SimBackend:
         self._states.pop(rid)
         self._req_rng.pop(rid, None)
 
-    def spill(self, rid: int) -> bool:
+    def spill(self, rid: int, force: bool = False) -> bool:
         """Preempt→spill: move the victim's pages to the host tier, keep
         its decode state + RNG stream, and resume via swap-in at
         re-admission — the preemption costs a transfer, not a re-prefill
@@ -560,20 +562,63 @@ class SimBackend:
         Returns False — caller falls back to the discard path — when
         there is no host tier, the victim is still mid-prefill (the
         cursor would be lost), or the cost model says recomputing its
-        tokens is cheaper than the round-trip transfer."""
+        tokens is cheaper than the round-trip transfer.  ``force`` skips
+        the cost model (a drain ahead of a replica crash wants the state
+        preserved even when a healthy-path preemption would recompute)
+        but never the safety guards."""
         if self.kv.host is None or self._prefill.pending(rid) \
                 or self.kv.is_spilled(rid):
             return False
         st = self._states.get(rid)
         if st is None:
             return False
-        toks = st.prompt_len + st.frozen
-        swap_s = swap_cost_s(self.kv.table_len(rid), self._page_bytes,
-                             self.analytic.device)
-        re_s = self.analytic.step_latency(1, toks, ctx=toks / 2)
-        if swap_s >= re_s:
-            return False
+        if not force:
+            toks = st.prompt_len + st.frozen
+            swap_s = swap_cost_s(self.kv.table_len(rid), self._page_bytes,
+                                 self.analytic.device)
+            re_s = self.analytic.step_latency(1, toks, ctx=toks / 2)
+            if swap_s >= re_s:
+                return False
         return self.kv.spill_request(rid) is not None
+
+    # -- cross-replica migration / crash support -----------------------
+    def migrate_out(self, rid: int) -> dict | None:
+        """Detach a host-spilled request into a portable ticket: the KV
+        payload plus the decode state and the per-request RNG stream.
+        ``migrate_in`` on a peer backend resumes the exact trajectory —
+        the sim's committed tokens depend only on the RNG stream and the
+        window-size sequence, both of which travel."""
+        if not self.kv.is_spilled(rid):
+            return None
+        payload = self.kv.export_spilled(rid)
+        if payload is None:
+            return None
+        return {"payload": payload, "state": self._states.pop(rid),
+                "rng": self._req_rng.pop(rid, None)}
+
+    def migrate_in(self, req: Request, ticket: dict) -> bool:
+        """Adopt a migrated request: its spill payload enters this
+        backend's host tier and its decode state + RNG stream install
+        under the same rid.  The normal spill-resume ``admit`` path then
+        swaps it onto the device.  False ⇒ this replica cannot host it
+        (allocator unchanged; caller should fall back to re-prefill)."""
+        if not self.kv.adopt_spilled(req.rid, ticket["payload"]):
+            return False
+        self._states[req.rid] = ticket["state"]
+        if ticket.get("rng") is not None:
+            self._req_rng[req.rid] = ticket["rng"]
+        return True
+
+    def crash_reset(self):
+        """Simulated replica death: all decode state, RNG streams,
+        prefill cursors, and KV contents (tables, spills, prefix cache)
+        are lost.  The allocator comes back empty and leak-free — what a
+        fresh process would see."""
+        self._prefill.queue = []
+        self._prefill.cursor = {}
+        self._states.clear()
+        self._req_rng.clear()
+        self.kv.crash_wipe()
 
     def state(self, rid: int):
         return self._states[rid]
@@ -1129,25 +1174,64 @@ class ModelBackend:
         self._states.pop(rid)
         self._req.pop(rid)
 
-    def spill(self, rid: int) -> bool:
+    def spill(self, rid: int, force: bool = False) -> bool:
         """Preempt→spill to the host tier (see :meth:`SimBackend.spill`):
         decode state is retained and re-admission swaps the exact KV bytes
         back, so the resumed trajectory is bit-identical to an
-        uninterrupted run.  False → caller uses the discard path."""
+        uninterrupted run.  False → caller uses the discard path.
+        ``force`` bypasses only the cost model (pre-crash drains)."""
         if not self.paged or self.kv.host is None \
                 or self._prefill.pending(rid) or self.kv.is_spilled(rid):
             return False
         st = self._states.get(rid)
         if st is None:
             return False
-        toks = st.prompt_len + st.frozen
-        swap_s = swap_cost_s(self.kv.table_len(rid),
-                             self._page_bytes or 1.0,
-                             self._analytic.device)
-        re_s = self._analytic.step_latency(1, toks, ctx=toks / 2)
-        if swap_s >= re_s:
-            return False
+        if not force:
+            toks = st.prompt_len + st.frozen
+            swap_s = swap_cost_s(self.kv.table_len(rid),
+                                 self._page_bytes or 1.0,
+                                 self._analytic.device)
+            re_s = self._analytic.step_latency(1, toks, ctx=toks / 2)
+            if swap_s >= re_s:
+                return False
         return self.kv.spill_request(rid) is not None
+
+    # -- cross-replica migration / crash support -----------------------
+    def migrate_out(self, rid: int) -> dict | None:
+        """Detach a host-spilled request into a portable ticket (KV bytes
+        + decode state); see :meth:`SimBackend.migrate_out`."""
+        if not self.paged or not self.kv.is_spilled(rid):
+            return None
+        payload = self.kv.export_spilled(rid)
+        if payload is None:
+            return None
+        return {"payload": payload, "state": self._states.pop(rid),
+                "rng": None, "req": self._req.pop(rid, None)}
+
+    def migrate_in(self, req: Request, ticket: dict) -> bool:
+        """Adopt a migrated request's spill payload + decode state; the
+        spill-resume ``admit`` path then swaps the exact KV bytes onto
+        this replica's device pool, so the resumed trajectory is
+        bit-identical (deterministic argmax decode over identical KV)."""
+        if not self.paged or not self.kv.adopt_spilled(req.rid,
+                                                       ticket["payload"]):
+            return False
+        self._states[req.rid] = ticket["state"]
+        self._req[req.rid] = req
+        return True
+
+    def crash_reset(self):
+        """Simulated replica death: decode states, prefill cursors, and
+        all KV contents are dropped; the allocator comes back empty."""
+        if self.paged:
+            self._prefill.queue = []
+            self._prefill.cursor = {}
+            self.kv.crash_wipe()
+        else:
+            for rid in list(self._slot_of):
+                self.release(rid)
+        self._states.clear()
+        self._req.clear()
 
     def state(self, rid: int):
         return self._states[rid]

@@ -121,6 +121,13 @@ class EngineCore:
         self._busy = 0.0
         self._max_itl = 0.0         # running stall gauge for the tracer
         self.preemptions = 0
+        # fault injection: transient slowdown window (every step latency is
+        # multiplied by slow_factor until slow_until) and the failover
+        # backlog — rids re-routed here after a peer crash; the scheduler
+        # runs in conservative mode until they are all admitted
+        self.slow_until = 0.0
+        self.slow_factor = 1.0
+        self._failover: set[int] = set()
 
     # -- queue introspection (used by routers / admission policies) -------
     @property
@@ -269,10 +276,11 @@ class EngineCore:
                 m = RequestMetrics(req.rid, req.arrival_time)
                 self._metrics[req.rid] = m
             m.admit_time = now
+            self._failover.discard(req.rid)
             self.tracer.req("admit", req.rid, now, self.replica,
                             wait=now - req.arrival_time,
                             n_preempts=m.preemptions)
-            prefill_lat = self.backend.admit(req)
+            prefill_lat = self.backend.admit(req) * self._slow_mult()
             self.clock.advance(prefill_lat)
             self._busy += prefill_lat
             now = self.clock.now()
@@ -368,13 +376,18 @@ class EngineCore:
         pf = self._prefill_tick_tokens()
         try:
             chunk = self.scheduler.select(b, kv_util=self._kv_utilization(),
-                                          prefill_tokens=pf)
-        except TypeError:           # scheduler predates the prefill signal
+                                          prefill_tokens=pf,
+                                          conservative=bool(self._failover))
+        except TypeError:           # scheduler predates the failover signal
             try:
                 chunk = self.scheduler.select(
-                    b, kv_util=self._kv_utilization())
-            except TypeError:       # ... or the memory signal
-                chunk = self.scheduler.select(b)
+                    b, kv_util=self._kv_utilization(), prefill_tokens=pf)
+            except TypeError:       # ... or the prefill signal
+                try:
+                    chunk = self.scheduler.select(
+                        b, kv_util=self._kv_utilization())
+                except TypeError:   # ... or the memory signal
+                    chunk = self.scheduler.select(b)
         self._ensure_step_capacity(chunk)
         while True:
             rids = [r.rid for r in self._active]
@@ -386,6 +399,7 @@ class EngineCore:
                 # partially ran — preempt a victim and retry it
                 if not self._preempt_for_memory():
                     raise
+        latency *= self._slow_mult()
         b = len(self._active)
         self.clock.advance(latency)
         self._busy += latency
@@ -437,8 +451,50 @@ class EngineCore:
         self.scheduler.observe(commit_masks, valids)
         self.tracer.tick(self, now - latency, latency, b, chunk, commits)
 
+    # -- fault injection / failover support --------------------------------
+    def _slow_mult(self) -> float:
+        """Latency multiplier while a transient-stall fault is active."""
+        if self.slow_factor > 1.0 and self.clock.now() < self.slow_until:
+            return self.slow_factor
+        return 1.0
+
+    def note_failover(self, rid: int):
+        """Flag a request re-routed here after a peer fault; the scheduler
+        stays in conservative (small-chunk) mode until every flagged rid
+        has been admitted — the pool is absorbing a dead replica's working
+        set, so the per-step speculative page reservation is trimmed."""
+        self._failover.add(rid)
+
+    def take_pending(self) -> list[Request]:
+        """Remove and return every queued (not yet admitted) request, in
+        arrival order — the cluster re-routes them after a fault."""
+        out = sorted(self._pending, key=lambda r: (r.arrival_time, r.rid))
+        for r in out:
+            self._arrival_untrack(r.arrival_time)
+        self._pending = []
+        return out
+
+    def crash(self, now: float):
+        """Replica process death at ``now``: every in-flight request is
+        handed back to the caller as ``(active, pending)`` for re-routing.
+        The backend is deliberately left untouched — the cluster harvests
+        migratable host-spilled state (``backend.migrate_out``) first,
+        then wipes it with ``backend.crash_reset()``.  In-flight metrics
+        stay local: a dead replica's partial timings never reach the
+        report (survivor metrics restart on the adopting replica, with
+        TTFT still measured from the original arrival)."""
+        self.clock.advance_to(now)
+        active, self._active = self._active, []
+        self._failover.clear()
+        return active, self.take_pending()
+
+    def recover(self, now: float):
+        """Bring a crashed replica back at ``now`` (empty, cold)."""
+        self.clock.advance_to(now)
+
     # -- preemption (cluster or memory KV-pressure relief) -----------------
-    def preempt(self, rid: int, reason: str = "cluster") -> bool:
+    def preempt(self, rid: int, reason: str = "cluster",
+                force_spill: bool = False) -> bool:
         """Evict an active request.  When the backend has a host KV tier
         and its cost model says the transfer wins, the pages are *spilled*
         (``backend.spill``): decode state survives, re-admission swaps the
@@ -466,7 +522,10 @@ class EngineCore:
                     except KeyError:
                         pages = 0
                 spill_fn = getattr(self.backend, "spill", None)
-                spilled = bool(spill_fn and spill_fn(rid))
+                if force_spill and spill_fn is not None:
+                    spilled = bool(spill_fn(rid, force=True))
+                else:
+                    spilled = bool(spill_fn and spill_fn(rid))
                 if not spilled:
                     # bank the wasted compute so token_utilization reflects
                     # the recompute cost of eviction

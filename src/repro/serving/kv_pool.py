@@ -214,6 +214,8 @@ class PagedKVAllocator:
     # host tier
     host: HostPagePool | None = field(default=None, init=False)
     _spilled: dict = field(default_factory=dict, init=False)  # rid → SpilledRequest
+    # pages withheld by a fault injector's OutOfPages storm (see seize_pages)
+    _seized: list = field(default_factory=list, init=False)
     stats: dict = field(init=False)
     # device-side page pool (None until init_storage; sim backends never set)
     k_pages: object = field(default=None, init=False)
@@ -231,7 +233,8 @@ class PagedKVAllocator:
         self._cached = [OrderedDict() for _ in range(self.kv_shards)]
         self._prefix_root = PrefixNode(tokens=(), depth=-1, base=0)
         self.stats = {"cow_copies": 0, "swap_in_pages": 0,
-                      "swap_out_pages": 0, "prefix_nodes_dropped": 0}
+                      "swap_out_pages": 0, "prefix_nodes_dropped": 0,
+                      "migrated_out_pages": 0, "migrated_in_pages": 0}
 
     def _mark_dirty(self, rid: int):
         self._dirty.add(rid)
@@ -475,6 +478,8 @@ class PagedKVAllocator:
              "utilization": 1.0 - free / self.n_pages,
              "pages_shared": self.pages_shared,
              "cached_prefix_pages": self.cached_pages}
+        if self._seized:
+            g["seized_pages"] = len(self._seized)
         if self.kv_shards > 1:
             g["kv_shards"] = self.kv_shards
             g["shard_pages_in_use"] = [
@@ -782,6 +787,107 @@ class PagedKVAllocator:
         if sp is not None:
             for slot in sp.slots:
                 self.host.free_slot(slot)
+
+    # ------------------------------------------------------------------
+    # Cross-replica migration: a spilled request's host pages are the
+    # portable representation of its KV state — export detaches them from
+    # this allocator (slots freed, bytes copied out), adopt re-homes them
+    # in another allocator's host tier.  Swap-in at the adopter then
+    # resumes the exact trajectory.
+    # ------------------------------------------------------------------
+    def export_spilled(self, rid: int) -> dict | None:
+        """Detach ``rid``'s spilled state into a self-contained payload
+        (token length, stripe offset, and — when host storage is
+        materialized — the raw KV bytes).  The local host slots are freed;
+        the request no longer exists in this allocator."""
+        sp = self._spilled.pop(rid, None)
+        if sp is None:
+            return None
+        payload = {"n_tokens": sp.n_tokens, "offset": sp.offset,
+                   "n_pages": len(sp.slots), "k": None, "v": None}
+        if self.host.k_host is not None:
+            sl = np.asarray(sp.slots, np.intp)
+            payload["k"] = self.host.k_host[:, sl].copy()
+            payload["v"] = self.host.v_host[:, sl].copy()
+        for slot in sp.slots:
+            self.host.free_slot(slot)
+        self.stats["migrated_out_pages"] += len(sp.slots)
+        return payload
+
+    def adopt_spilled(self, rid: int, payload: dict) -> bool:
+        """Re-home an exported spill payload in this allocator's host tier.
+        Returns False (allocator unchanged) when there is no host tier, not
+        enough free slots, ``rid`` already exists here, or the payload
+        carries KV bytes this pool cannot store."""
+        n = payload["n_pages"]
+        if (self.host is None or rid in self._spilled
+                or rid in self._tables or self.host.free_slots < n):
+            return False
+        if payload["k"] is not None and self.has_storage:
+            self.host.ensure_storage(self.k_pages.shape, self.k_pages.dtype)
+        if self.host.k_host is None and payload["k"] is not None:
+            # adopter has never materialized storage and has no device pool
+            # to size it from — bytes would be lost, refuse the transfer
+            if not self.has_storage:
+                return False
+        slots = [self.host.alloc_slot() for _ in range(n)]
+        if payload["k"] is not None and self.host.k_host is not None:
+            sl = np.asarray(slots, np.intp)
+            self.host.k_host[:, sl] = payload["k"]
+            self.host.v_host[:, sl] = payload["v"]
+        self._spilled[rid] = SpilledRequest(
+            slots, payload["n_tokens"], payload["offset"] % self.kv_shards)
+        self.stats["migrated_in_pages"] += n
+        return True
+
+    # ------------------------------------------------------------------
+    # Fault support: OutOfPages storms and crash wipes
+    # ------------------------------------------------------------------
+    def seize_pages(self, n: int) -> int:
+        """Withhold up to ``n`` plain-free pages from allocation (an
+        injected memory-pressure storm: pages vanish round-robin across
+        shards, as if a co-tenant grabbed them).  Parked prefix pages are
+        not touched — the storm steals *free* memory, the cache responds
+        through the normal eviction path as pressure mounts.  Returns the
+        number actually seized."""
+        taken = 0
+        while taken < n and any(self._free[s] for s in range(self.kv_shards)):
+            s = max(range(self.kv_shards), key=lambda i: len(self._free[i]))
+            self._seized.append(self._free[s].pop())
+            taken += 1
+        if taken:
+            self._batch_memo = None
+        return taken
+
+    def release_seized(self) -> int:
+        """Return every seized page to its shard's free list."""
+        n = len(self._seized)
+        for page in self._seized:
+            self._free[self.shard_of(page)].append(page)
+        self._seized = []
+        return n
+
+    def drop_prefix_cache(self):
+        """Forget every indexed prefix: parked device pages return to the
+        free lists, host-resident prefix nodes free their slots, pages
+        still referenced by live tables merely unregister (they free
+        normally at the holders' release).  Used on crash wipes — a dead
+        replica's cache contents are gone."""
+        for child in list(self._prefix_root.children.values()):
+            self._drop_node(child)
+        self._prefix_root = PrefixNode(tokens=(), depth=-1, base=0)
+
+    def crash_wipe(self):
+        """Simulated process death: every table, spill, and cached prefix
+        page is dropped and the free lists are rebuilt full (seized pages
+        included — the storm dies with the process).  Decode *state* loss
+        is the backend's concern; this resets only the memory plane."""
+        for rid in list(self._tables):
+            self.free(rid)
+        for rid in list(self._spilled):
+            self.discard_spilled(rid)
+        self.drop_prefix_cache()
+        self.release_seized()
 
     # ------------------------------------------------------------------
     # Device-side page movement (COW copies, host→device swap-ins).

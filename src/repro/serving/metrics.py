@@ -45,6 +45,15 @@ class ClusterReport:
     preemptions: int = 0
     route_counts: list = field(default_factory=list)
     rejected: list = field(default_factory=list)   # rids refused admission
+    # -- fault tolerance (PR 9) -----------------------------------------
+    rejections: list = field(default_factory=list)  # structured reject dicts
+    migrations: int = 0             # state-preserving cross-replica moves
+    migrations_failed: int = 0      # payload had no adopter → re-prefill
+    resubmissions: int = 0          # fault-displaced from-scratch re-routes
+    lost_tokens: int = 0            # committed tokens wiped by crashes
+    lost_computed_tokens: int = 0   # compute discarded (crash or drain)
+    wiped: list = field(default_factory=list)  # rids whose stream restarted
+    faults: list = field(default_factory=list)     # applied fault-op log
 
     @property
     def metrics(self) -> list:
@@ -72,16 +81,24 @@ class ClusterReport:
         return self.total_tokens / max(self.computed_tokens, 1)
 
     def goodput(self, slo_tpot: float) -> float:
-        """Output tokens/sec from requests whose TPOT met the SLO."""
+        """Output tokens/sec from requests served *cleanly*: TPOT met the
+        SLO and the stream never restarted mid-flight.  A crash that wipes
+        committed tokens forces a from-scratch re-serve — the user saw
+        their stream reset, so those tokens are re-served work, not
+        well-served work (``wiped`` carries the rids)."""
+        bad = set(self.wiped)
         good = sum(m.n_tokens for m in self.metrics
-                   if m.n_tokens > 0 and m.tpot <= slo_tpot)
+                   if m.n_tokens > 0 and m.tpot <= slo_tpot
+                   and m.rid not in bad)
         return good / max(self.makespan, 1e-9)
 
     def slo_attainment(self, slo_tpot: float) -> float:
+        bad = set(self.wiped)
         ms = [m for m in self.metrics if m.n_tokens > 0]
         if not ms:
             return float("nan")
-        return sum(m.tpot <= slo_tpot for m in ms) / len(ms)
+        return sum(m.tpot <= slo_tpot and m.rid not in bad
+                   for m in ms) / len(ms)
 
     def replica_utilization(self) -> list:
         """Fraction of the cluster makespan each replica spent computing."""
@@ -95,6 +112,21 @@ class ClusterReport:
     def ttft_percentile(self, q: float = 90.0) -> float:
         vals = [m.ttft for m in self.metrics if m.first_token_time >= 0]
         return float(np.percentile(vals, q)) if vals else float("nan")
+
+    def reject_reasons(self) -> dict:
+        """Structured breakdown of refused admissions: ``never_fits``
+        (bigger than any replica's pool/context — would queue forever),
+        ``pool_pressure`` (spill-retry budget exhausted under sustained
+        saturation), ``deadline`` (shed — even the optimistic service
+        floor missed the request's deadline).  Legacy fault-free runs
+        predate the structured records; their rejects all came from the
+        ``fits_ever`` gate, so count them as ``never_fits``."""
+        if not self.rejections and self.rejected:
+            return {"never_fits": len(self.rejected)}
+        out: dict = {}
+        for rec in self.rejections:
+            out[rec["reason"]] = out.get(rec["reason"], 0) + 1
+        return out
 
     def preemption_impact(self, q: float = 90.0) -> dict:
         """SLO impact of eviction+recompute: TPOT percentile of requests

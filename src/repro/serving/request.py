@@ -15,6 +15,9 @@ class Request:
     eos_token: int | None = None
     dataset: str = "synthetic"
     priority: int = 0                      # higher preempts lower (cluster)
+    deadline: float | None = None          # absolute finish deadline (virtual
+    #                                        clock); None = best-effort
+    slo_class: str = "standard"            # label for per-class reporting
 
 
 @dataclass

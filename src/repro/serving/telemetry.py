@@ -73,6 +73,9 @@ class NullTracer:
     def counter(self, name, t, value, replica=0):
         pass
 
+    def instant(self, kind, t, replica=0, **payload):
+        pass
+
     def export(self, path):
         pass
 
@@ -154,6 +157,11 @@ class Tracer:
         """Ad-hoc counter sample (becomes its own Perfetto counter track)."""
         self._append(("counter", name, t, value, replica))
 
+    def instant(self, kind, t, replica=0, **payload):
+        """Replica-scoped instant with no request id (fault injections,
+        recoveries) — rendered as a Perfetto ``i`` event, never a span."""
+        self._append(("inst", kind, t, replica, payload))
+
     # -- record → dict view ---------------------------------------------
     def records(self) -> list[dict]:
         """Events as flat dicts (the JSONL line format)."""
@@ -167,6 +175,10 @@ class Tracer:
             elif ev[0] == "req":
                 _, kind, rid, t, replica, payload = ev
                 d = {"kind": kind, "rid": rid, "t": t, "replica": replica}
+                d.update(payload)
+            elif ev[0] == "inst":
+                _, kind, t, replica, payload = ev
+                d = {"kind": kind, "t": t, "replica": replica}
                 d.update(payload)
             else:
                 _, name, t, value, replica = ev
@@ -230,9 +242,11 @@ def load_jsonl(path: str) -> list[dict]:
 _US = 1e6          # virtual seconds → trace microseconds
 
 REQUEST_EVENT_KINDS = ("submit", "admit", "prefill_chunk", "first_token",
-                       "finish", "preempt", "route", "spill", "reject")
+                       "finish", "preempt", "route", "spill", "reject",
+                       "shed", "migrate", "wipe")
 _INSTANT_KINDS = ("prefill_chunk", "preempt", "route", "spill", "reject",
-                  "first_token")
+                  "first_token", "shed", "migrate", "wipe", "fault",
+                  "recover")
 
 
 def perfetto_events(records: list[dict]) -> list[dict]:
@@ -408,10 +422,15 @@ def replay_select(scheduler, decision: dict) -> int:
                            tuple(scheduler.candidates),
                            hysteresis=scheduler.hysteresis,
                            memory_lo=scheduler.memory_lo,
-                           memory_hi=scheduler.memory_hi)
+                           memory_hi=scheduler.memory_hi,
+                           failover_margin=getattr(
+                               scheduler, "failover_margin", 0.15),
+                           conservative_cap=getattr(
+                               scheduler, "conservative_cap", None))
     sch._current = decision["cur"]
     return sch.select(decision["b"], kv_util=decision["kv_util"],
-                      prefill_tokens=decision["prefill_tokens"])
+                      prefill_tokens=decision["prefill_tokens"],
+                      conservative=decision.get("conservative", False))
 
 
 # ===========================================================================
@@ -593,4 +612,55 @@ def ttft_breakdown(spans: dict[int, dict]) -> dict:
         "n_preempted": len(pre),
         "max_preempts_per_request": max((s["n_preempts"] for s in fin),
                                         default=0),
+    }
+
+
+def fault_summary(records: list[dict]) -> dict:
+    """Aggregate the fault-tolerance story out of an event log: injected
+    faults and recoveries per replica, migrations vs re-submissions, shed
+    and rejected requests with their structured reasons, and per-fault
+    recovery lag (fault instant → the last migrated/re-routed request's
+    finish)."""
+    faults, recovers = [], []
+    migrates, sheds, rejects, wipes = [], [], [], []
+    finish_t: dict[int, float] = {}
+    for rec in records:
+        kind = rec.get("kind")
+        if kind == "fault":
+            faults.append(rec)
+        elif kind == "recover":
+            recovers.append(rec)
+        elif kind == "migrate":
+            migrates.append(rec)
+        elif kind == "shed":
+            sheds.append(rec)
+        elif kind == "reject":
+            rejects.append(rec)
+        elif kind == "wipe":
+            wipes.append(rec)
+        elif kind == "finish":
+            finish_t[rec.get("rid")] = rec["t"]
+    reasons: dict[str, int] = {}
+    for rec in sheds + rejects:
+        r = rec.get("reason", "unknown")
+        reasons[r] = reasons.get(r, 0) + 1
+    displaced = [r for r in migrates if r.get("rid") in finish_t]
+    recovery_lag = None
+    if faults and displaced:
+        t0 = min(r["t"] for r in faults)
+        recovery_lag = max(finish_t[r["rid"]] for r in displaced) - t0
+    return {
+        "n_faults": len(faults),
+        "faults_by_kind": {k: sum(1 for f in faults
+                                  if f.get("fault") == k)
+                          for k in {f.get("fault") for f in faults}},
+        "n_recoveries": len(recovers),
+        "n_migrations": len(migrates),
+        "n_migrated_finished": len(displaced),
+        "n_shed": len(sheds),
+        "n_rejects": len(rejects),
+        "n_wiped": len({r.get("rid") for r in wipes}),
+        "wiped_tokens": sum(r.get("lost", 0) for r in wipes),
+        "reject_reasons": reasons,
+        "recovery_lag_s": recovery_lag,
     }

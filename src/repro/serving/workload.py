@@ -52,7 +52,7 @@ class CommitSimulator:
 
     def __init__(self, tokens_per_step: float, gamma: float = 0.95,
                  block_size: int = 32, threshold: float = 0.9,
-                 seed: int = 0):
+                 seed: int = 0, calib_seed: int | None = None):
         self.gamma = gamma
         self.threshold = threshold
         self.block_size = block_size
@@ -60,10 +60,17 @@ class CommitSimulator:
         # standard BD-32 decoding, where already-committed window slots are
         # recomputed deadweight (each token is computed ≥2×).  Bisect p0 so
         # the simulated steady-state block decode matches the target.
+        # ``calib_seed`` pins the calibration noise independently of the
+        # sampling seed: the p0 curve stands in for the *model*, so replicas
+        # serving the same model (e.g. a fault-tolerant cluster migrating
+        # requests between them) must share it even when their per-backend
+        # sampling seeds differ.
+        if calib_seed is None:
+            calib_seed = seed
         lo, hi = 1e-3, 1.0
         for _ in range(18):
             mid = 0.5 * (lo + hi)
-            if self._steady_tokens_per_step(mid, seed) < tokens_per_step:
+            if self._steady_tokens_per_step(mid, calib_seed) < tokens_per_step:
                 lo = mid
             else:
                 hi = mid

@@ -9,15 +9,21 @@
   the global batch and data stream are functions of the step counter, so a
   restart on a different topology is bitwise-consistent in expectation.
 * :class:`FailureInjector` — deterministic failure schedule for tests and
-  chaos drills (raise at step k, or with probability p per step).
+  chaos drills (raise at step k, or with probability p per step).  Now
+  lives in :mod:`repro.common.faults` (shared with the serving cluster's
+  ``FaultPlan``) and is re-exported here for compatibility.
 """
 
 from __future__ import annotations
 
 from collections import defaultdict, deque
-from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.common.faults import FailureInjector, SimulatedFailure
+
+__all__ = ["StragglerMonitor", "FailureInjector", "SimulatedFailure",
+           "elastic_shardings"]
 
 
 class StragglerMonitor:
@@ -46,30 +52,6 @@ class StragglerMonitor:
     def fleet_p50(self):
         vals = [t for dq in self._times.values() for t in dq]
         return float(np.median(vals)) if vals else float("nan")
-
-
-@dataclass
-class FailureInjector:
-    """Deterministic failure schedule for restart drills."""
-    fail_at_steps: tuple = ()
-    fail_prob: float = 0.0
-    seed: int = 0
-    _rng: np.random.Generator = field(init=False, repr=False)
-    _fired: set = field(default_factory=set, init=False, repr=False)
-
-    def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
-
-    def check(self, step: int):
-        if step in self.fail_at_steps and step not in self._fired:
-            self._fired.add(step)
-            raise SimulatedFailure(f"injected failure at step {step}")
-        if self.fail_prob > 0 and self._rng.random() < self.fail_prob:
-            raise SimulatedFailure(f"random failure at step {step}")
-
-
-class SimulatedFailure(RuntimeError):
-    pass
 
 
 def elastic_shardings(logical_axes_tree, rules):

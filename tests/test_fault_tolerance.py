@@ -1,0 +1,526 @@
+"""Fault-tolerant cluster serving (ISSUE 9): deterministic fault plans,
+state-preserving migration, bounded retries, health-aware routing, and
+deadline shedding.
+
+The load-bearing claim is *bit-identity*: a request whose host-spilled KV
+state migrates off a dying replica must resume the exact trajectory its
+source replica would have produced — same committed tokens, same order —
+because the commit curve models the (shared) model while the per-request
+sampling stream travels inside the migration ticket.
+"""
+
+from types import SimpleNamespace
+
+import pytest
+
+from repro.cluster import (ClusterEngine, HealthMonitor, KVAdmissionPolicy,
+                           RecoveryPolicy, build_sim_cluster, make_router)
+from repro.common.faults import FaultPlan
+from repro.core import FixedScheduler
+from repro.core.latency_model import A100_80G
+from repro.models.common import ArchConfig
+from repro.serving import EngineCore, Request, SimBackend, Tracer
+from repro.serving.metrics import ClusterReport
+from repro.serving.workload import DATASETS
+
+CFG = ArchConfig(name="sim8b", family="dense", n_layers=36, d_model=4096,
+                 n_heads=32, n_kv_heads=8, d_ff=12288, vocab_size=151936,
+                 block_size=32)
+PROF = DATASETS["sharegpt"]
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+
+def _build_cluster(plan, *, n=2, seed=9, recovery=None, health=None,
+                   router="health:jsq", tracer=None, kv_pages=4096,
+                   host_kv_pages=8192, max_spill_retries=None):
+    """Two (by default) Sim replicas with a host spill tier — the minimal
+    cluster where a crash has somewhere to migrate to.  The shared
+    ``commit_calib_seed`` is what build_sim_cluster also wires when a
+    fault plan is present: every replica serves the same 'model'."""
+    replicas = []
+    for i in range(n):
+        be = SimBackend(CFG, A100_80G,
+                        tokens_per_step=PROF.tokens_per_step_bd32,
+                        decode_mode="elastic", kv_pool_pages=kv_pages,
+                        seed=seed + 1000 * i, prefill_mode="chunked",
+                        host_kv_pages=host_kv_pages, commit_calib_seed=seed)
+        core = EngineCore(be, FixedScheduler(8), max_batch=8, tracer=tracer)
+        core.replica = i
+        replicas.append(core)
+    return ClusterEngine(replicas, make_router(router),
+                         admission=KVAdmissionPolicy(), tracer=tracer,
+                         fault_plan=plan,
+                         recovery=recovery or RecoveryPolicy(),
+                         health=health, max_spill_retries=max_spill_retries)
+
+
+def _reqs(n=8, prompt=64, out=48, gap=0.01):
+    return [Request(rid=i, prompt_len=prompt, max_new_tokens=out,
+                    arrival_time=gap * i) for i in range(n)]
+
+
+def _spy_outputs(eng):
+    """Capture every request's final output tokens at release time."""
+    outs = {}
+    for core in eng.replicas:
+        be = core.backend
+
+        def make(orig, be):
+            def release(rid):
+                outs[rid] = tuple(be.state(rid).output_tokens)
+                return orig(rid)
+            return release
+
+        be.release = make(be.release, be)
+    return outs
+
+
+def _audit_leak_free(kv):
+    """Post-run allocator audit: a fault-ridden run must end exactly where
+    a clean one does — every page free, no spills, no seized pages held
+    past the storm (the run may finish mid-storm; ending it must return
+    the pages)."""
+    from test_kv_pool import _check_two_tier
+    kv.release_seized()
+    assert not kv._tables and not kv._spilled
+    assert kv.free_pages == kv.n_pages - sum(
+        len(kv._cached[s]) for s in range(kv.kv_shards))
+    _check_two_tier(kv)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: parsing, seeding, expansion
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parse():
+    plan = FaultPlan.parse("crash@2.5:r1:down=1.0:warn=0.25;"
+                           "stall@1:r0:dur=0.5:slow=4;oom@3:r2:frac=0.5")
+    assert [e.kind for e in plan.events] == ["stall", "crash", "oom"]
+    crash = plan.events[1]
+    assert crash.replica == 1 and crash.t == 2.5
+    assert crash.duration == 1.0 and crash.warn_s == 0.25
+    assert plan.events[0].slow_factor == 4.0
+    assert plan.events[2].seize_frac == 0.5
+    assert plan.horizon == pytest.approx(4.0)  # oom@3 + default dur=1
+    assert bool(plan) and not bool(FaultPlan())
+
+
+@pytest.mark.parametrize("spec", [
+    "explode@1:r0",              # unknown kind
+    "crash@1",                   # no replica
+    "crash@1:r0:bogus=3",        # unknown option
+    "crash:r0",                  # no time
+])
+def test_fault_plan_parse_errors(spec):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(spec)
+
+
+def test_fault_plan_random_is_a_pure_value():
+    kw = dict(crash_rate=0.5, stall_rate=0.5, oom_rate=0.5)
+    a = FaultPlan.random(3, horizon_s=4.0, seed=7, **kw)
+    b = FaultPlan.random(3, horizon_s=4.0, seed=7, **kw)
+    c = FaultPlan.random(3, horizon_s=4.0, seed=8, **kw)
+    assert a == b                       # all randomness at construction
+    assert a != c
+    assert all(0 <= e.t < 4.0 and 0 <= e.replica < 3 for e in a.events)
+    assert all(a.events[i].t <= a.events[i + 1].t
+               for i in range(len(a.events) - 1))
+
+
+def test_fault_plan_schedule_expansion():
+    plan = FaultPlan.parse("crash@2:r0:down=1.0:warn=0.25;"
+                           "stall@1:r1:dur=0.5;oom@3:r0:dur=0.5")
+    ops = plan.schedule()
+    assert [t for t, _, _ in ops] == sorted(t for t, _, _ in ops)
+    by_op = [(op, ev.replica) for _, op, ev in ops]
+    assert ("warn", 0) in by_op and ("crash", 0) in by_op
+    assert ("recover", 0) in by_op
+    assert ("stall", 1) in by_op and ("stall_end", 1) in by_op
+    assert ("oom", 0) in by_op and ("oom_end", 0) in by_op
+    # warn precedes crash precedes recover
+    times = {op: t for t, op, ev in ops if ev.kind == "crash"}
+    assert times["warn"] == 1.75 < times["crash"] == 2.0 \
+        < times["recover"] == 3.0
+
+
+def test_failure_injector_shared_between_training_and_serving():
+    """Satellite (a): one failure-schedule module; the training import
+    path re-exports it."""
+    from repro.common import faults as common
+    from repro.training import fault_tolerance as training
+    assert training.FailureInjector is common.FailureInjector
+    assert training.SimulatedFailure is common.SimulatedFailure
+    inj = common.FailureInjector(fail_at_steps=(3,))
+    inj.check(2)
+    with pytest.raises(common.SimulatedFailure):
+        inj.check(3)
+    inj.check(3)                        # fires once
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: crash → drain → migrate → bit-identical resume
+# ---------------------------------------------------------------------------
+
+def test_migrated_requests_resume_bit_identical():
+    """A request drained off a dying replica and adopted by a healthy peer
+    commits the exact token sequence the no-fault run produces."""
+    def run(plan, tracer=None):
+        eng = _build_cluster(plan, tracer=tracer)
+        outs = _spy_outputs(eng)
+        rep = eng.run(_reqs())
+        return rep, outs
+
+    _, base_out = run(None)
+    tr = Tracer()
+    rep, fault_out = run(
+        FaultPlan.parse("crash@0.08:r0:down=0.5:warn=0.03"), tr)
+
+    migrated = sorted({r["rid"] for r in tr.records()
+                       if r.get("kind") == "migrate"})
+    assert migrated, "crash produced no migrations — timing drifted"
+    assert rep.migrations == len(migrated)
+    assert len(fault_out) == 8          # every request still finishes
+    for rid in migrated:
+        assert fault_out[rid] == base_out[rid], \
+            f"rid {rid} diverged after migration"
+    # the drain beat the crash: no committed work was lost
+    assert rep.lost_tokens == 0
+
+
+def test_migration_beats_naive_resubmission():
+    """Acceptance check in miniature: with migration + health routing a
+    warned crash loses nothing; the naive baseline re-prefills from
+    scratch and wipes committed work."""
+    plan = FaultPlan.parse("crash@0.08:r0:down=0.5:warn=0.03")
+
+    eng = _build_cluster(plan)
+    rep = eng.run(_reqs())
+    assert rep.migrations > 0 and rep.lost_tokens == 0
+
+    naive = _build_cluster(plan, recovery=RecoveryPolicy(migrate=False),
+                           health=False, router="jsq")
+    nrep = naive.run(_reqs())
+    assert nrep.migrations == 0
+    assert nrep.resubmissions > 0
+    assert nrep.lost_tokens > 0         # committed tokens wiped by crash
+    assert rep.lost_tokens < nrep.lost_tokens
+    # both runs still complete the full workload (re-prefill is slower,
+    # not lossy at the request level)
+    assert len(rep.metrics) == len(nrep.metrics) == 8
+
+
+def test_model_backend_migration_bit_identical():
+    """Real-model replica pair: a request force-spilled mid-decode (8
+    committed tokens) migrates its exact KV bytes + decode state to a
+    peer and finishes with the token sequence of an uninterrupted run.
+    Drives the same call sequence ``ClusterEngine._adopt`` uses — the
+    model cluster's virtual clock only advances on prefill, so a
+    timeline-pinned mid-decode crash is not expressible there."""
+    jax = pytest.importorskip("jax")
+    import numpy as np
+    from repro.models import build_model
+    from repro.serving import ModelBackend
+
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                     block_size=8, confidence_threshold=0.6, diffusion=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def make_core(outs):
+        be = ModelBackend(model, params, n_slots=8, max_len=96,
+                          decode_mode="elastic", prefill_mode="chunked",
+                          prefill_token_budget=16, host_kv_pages=512)
+        core = EngineCore(be, FixedScheduler(8), max_batch=8)
+
+        orig = be.release
+
+        def release(rid):
+            outs[rid] = tuple(be.state(rid).output_tokens)
+            return orig(rid)
+
+        be.release = release
+        return core
+
+    def req():
+        rng = np.random.default_rng(3)
+        r = Request(rid=0, prompt_len=40, max_new_tokens=24,
+                    arrival_time=0.0)
+        r.prompt_tokens = rng.integers(4, 248, 40).tolist()
+        return r
+
+    base_outs = {}
+    core = make_core(base_outs)
+    core.submit(req())
+    while not core.idle:
+        core.tick()
+    assert len(base_outs[0]) == 24
+
+    # run a twin until 8 tokens committed, then drain + migrate
+    src_outs = {}
+    src = make_core(src_outs)
+    src.submit(req())
+    while not src.idle:
+        st = src.backend._states.get(0)
+        if st is not None and st.n_committed >= 8 \
+                and not src.backend._prefill.pending(0):
+            break
+        src.tick()
+    assert src.backend._states[0].n_committed >= 8
+    assert src.preempt(0, reason="drain", force_spill=True)
+    assert src.backend.kv.is_spilled(0)
+    (moved,) = src.take_pending()
+    ticket = src.backend.migrate_out(0)
+    assert ticket is not None
+    assert not src.backend.kv._spilled        # state left the source
+
+    dst_outs = {}
+    dst = make_core(dst_outs)
+    assert dst.backend.migrate_in(moved, ticket)
+    dst.note_failover(moved.rid)
+    dst.submit(moved)
+    while not dst.idle:
+        dst.tick()
+    assert dst_outs[0] == base_outs[0]        # exact trajectory resumed
+
+
+def test_unwarned_crash_resubmits_and_completes():
+    """warn=0 ⇒ no drain window: active work dies with the replica, gets
+    re-submitted, and the workload still completes."""
+    plan = FaultPlan.parse("crash@0.08:r0:down=0.4")
+    eng = _build_cluster(plan)
+    rep = eng.run(_reqs())
+    assert len(rep.metrics) == 8
+    assert rep.resubmissions > 0
+    assert rep.lost_computed_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# Property: any seeded plan leaves the allocators leak-free and terminates
+# ---------------------------------------------------------------------------
+
+def _check_random_plan(seed):
+    plan = FaultPlan.random(2, horizon_s=0.6, seed=seed,
+                            crash_rate=2.0, stall_rate=2.0,
+                            oom_rate=3.0, duration_s=0.2, warn_s=0.03)
+    eng = _build_cluster(plan, max_spill_retries=8)
+    rep = eng.run(_reqs(6, out=24))
+    # terminates with every request accounted for exactly once
+    assert len(rep.metrics) + len(rep.rejected) == 6
+    assert not eng._spill and not eng._migrating and not eng._retry
+    for core in eng.replicas:
+        _audit_leak_free(core.backend.kv)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_fault_plans_leak_free(seed):
+    _check_random_plan(seed)
+
+
+def test_random_fault_plans_leak_free_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st  # noqa: E402
+
+    @given(seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=8, deadline=None)
+    def check(seed):
+        _check_random_plan(seed)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Bounded retries with exponential backoff (satellite c)
+# ---------------------------------------------------------------------------
+
+def test_retry_budget_and_backoff():
+    eng = _build_cluster(None, max_spill_retries=2,
+                         recovery=RecoveryPolicy(backoff_s=0.1,
+                                                 backoff_mult=2.0))
+    eng._place = lambda req, now=None: -1       # placement always fails
+    req = Request(rid=42, prompt_len=8, max_new_tokens=8, arrival_time=0.0)
+    eng._spill = [req]
+
+    eng._retry_spill(0.0)                       # retry 1 → backoff 0.1
+    assert eng._retry[42][0] == 1
+    assert eng._retry[42][1] == pytest.approx(0.1)
+    eng._retry_spill(0.05)                      # inside backoff: no count
+    assert eng._retry[42][0] == 1 and eng._spill == [req]
+    eng._retry_spill(0.2)                       # retry 2 → backoff 0.2
+    assert eng._retry[42][0] == 2
+    assert eng._retry[42][1] == pytest.approx(0.4)
+    eng._retry_spill(1.0)                       # over budget → reject
+    assert not eng._spill and 42 not in eng._retry
+    assert eng.rejections[-1]["reason"] == "pool_pressure"
+    assert eng.rejections[-1]["rid"] == 42
+    assert [r.rid for r in eng.rejected] == [42]
+
+
+def test_fault_plan_defaults_a_retry_cap():
+    """A fault-free cluster keeps the legacy unbounded spill queue; a
+    fault plan flips on a finite failover budget automatically."""
+    assert _build_cluster(None).max_spill_retries is None
+    plan = FaultPlan.parse("stall@1:r0:dur=0.1")
+    assert _build_cluster(plan).max_spill_retries == 64
+
+
+# ---------------------------------------------------------------------------
+# Deadline-based load shedding (graceful degradation)
+# ---------------------------------------------------------------------------
+
+def test_deadline_shedding_structured_reason():
+    cluster = build_sim_cluster(CFG, PROF, 2, "health:jsq",
+                                device=A100_80G, mode="elastic",
+                                kv_pages=4096, max_batch=8, seed=9)
+    reqs = _reqs(3, out=32)
+    reqs[1].deadline = reqs[1].arrival_time + 1e-6   # impossible
+    reqs[1].slo_class = "interactive"
+    reqs[2].deadline = reqs[2].arrival_time + 600.0  # trivially feasible
+    rep = cluster.run(reqs)
+
+    assert rep.reject_reasons() == {"deadline": 1}
+    (rec,) = rep.rejections
+    assert rec["rid"] == 1 and rec["reason"] == "deadline"
+    assert rec["slo_class"] == "interactive"
+    assert rec["retry_after"] > 0        # optimistic floor, a usable hint
+    assert sorted(m.rid for m in rep.metrics) == [0, 2]
+
+
+def test_reject_reasons_legacy_fallback():
+    rep = ClusterReport([], rejected=[3, 7])
+    assert rep.reject_reasons() == {"never_fits": 2}
+    assert rep.migrations == 0 and rep.lost_tokens == 0
+    assert rep.rejections == [] and rep.faults == []
+
+
+def test_oversized_request_rejected_never_fits():
+    eng = _build_cluster(None)
+    rep = eng.run([Request(rid=0, prompt_len=4096 * 64,
+                           max_new_tokens=64, arrival_time=0.0)])
+    assert rep.reject_reasons() == {"never_fits": 1}
+
+
+# ---------------------------------------------------------------------------
+# Health states, rewarming hysteresis, health-aware routing
+# ---------------------------------------------------------------------------
+
+def test_health_monitor_lifecycle():
+    hm = HealthMonitor(2, rewarm_s=1.0, rewarm_depth=8)
+    assert hm.state(0, 0.0) == "healthy" and hm.routable(0, 0.0)
+
+    hm.crash(0, 1.0, until=2.0)
+    assert hm.state(0, 1.5) == "down" and not hm.routable(0, 1.5)
+    assert hm.state(0, 10.0) == "down"   # crashes never auto-decay
+
+    hm.recover(0, 2.0)
+    assert hm.state(0, 2.1) == "rewarming" and hm.routable(0, 2.1)
+    assert hm.penalty(0, 2.1) > hm.penalty(1, 2.1)   # healthy ranks first
+    # depth gate ramps 1 → rewarm_depth across the window
+    core = SimpleNamespace(queue_depth=0)
+    assert hm.allows(0, core, 2.0)
+    core.queue_depth = 4
+    assert not hm.allows(0, core, 2.0)   # cold replica takes 1 at a time
+    assert hm.allows(0, core, 2.9)       # nearly warm: depth ≈ rewarm_depth
+    assert hm.state(0, 3.5) == "healthy"
+
+    hm.mark(1, "degraded", 5.0, until=6.0)
+    assert hm.state(1, 5.5) == "degraded" and hm.routable(1, 5.5)
+    assert hm.state(1, 6.0) == "healthy"    # transient labels decay
+
+    hm.mark(1, "failing", 7.0)
+    assert not hm.routable(1, 7.5)          # drain: no new placements
+
+
+def test_health_router_filters_and_deprioritizes():
+    router = make_router("health:jsq")
+    assert router.name == "health:jsq"
+    hm = HealthMonitor(3, rewarm_s=1.0)
+    router.monitor = hm
+    router.observe(5.0)
+    cores = [SimpleNamespace(queue_depth=d) for d in (2, 0, 1)]
+    req = Request(rid=0, prompt_len=8, max_new_tokens=8, arrival_time=5.0)
+
+    assert router.rank(cores, req) == [1, 2, 0]          # plain JSQ
+    hm.crash(1, 5.0, until=99.0)
+    assert router.rank(cores, req) == [2, 0]             # down: filtered
+    hm.recover(1, 5.0)                                   # → rewarming
+    assert router.rank(cores, req) == [2, 0, 1]          # penalized last
+    # without a monitor the wrapper is transparent
+    router.monitor = None
+    assert router.rank(cores, req) == [1, 2, 0]
+
+
+def test_engine_wires_health_only_with_faults():
+    plan = FaultPlan.parse("crash@1:r0:down=0.1")
+    eng = _build_cluster(plan)
+    assert eng.health is not None
+    assert eng.router.monitor is eng.health
+    # explicit opt-out survives a fault plan (the naive baseline)
+    naive = _build_cluster(plan, health=False, router="jsq")
+    assert naive.health is None
+
+
+# ---------------------------------------------------------------------------
+# Conservative chunking during failover
+# ---------------------------------------------------------------------------
+
+def test_conservative_select_caps_chunk():
+    be = SimBackend(CFG, A100_80G,
+                    tokens_per_step=PROF.tokens_per_step_bd32, seed=0)
+    from repro.core.scheduler import scheduler_for_mode
+    sched = scheduler_for_mode(
+        "elastic", be.analytic,
+        prior_tokens_per_step=PROF.tokens_per_step_bd32)
+    cands = sorted(sched.candidates)
+    # conservative mode shifts the memory knee by failover_margin: with a
+    # roomy pool it is a no-op (full-speed failover absorption) ...
+    roomy = sched.select(4, kv_util=0.2, conservative=True)
+    assert roomy == sched.select(4, kv_util=0.2)
+    assert sched.last_decision["conservative"] is False
+    # ... and near the knee it bites a margin early
+    normal = sched.select(4, kv_util=sched.memory_lo - 0.05)
+    cautious = sched.select(4, kv_util=sched.memory_lo - 0.05,
+                            conservative=True)
+    assert cautious < normal
+    assert sched.last_decision["conservative"] is True
+    # the operator hard cap still composes on top
+    sched.conservative_cap = cands[0]
+    assert sched.select(4, kv_util=0.2, conservative=True) == cands[0]
+    sched.conservative_cap = None
+    # the failover flag lives per-request on the engine core and clears
+    # once the rescued request is admitted
+    core = EngineCore(be, sched, max_batch=8)
+    core.note_failover(5)
+    assert 5 in core._failover
+
+
+# ---------------------------------------------------------------------------
+# OOM storms: page seizure is transactional
+# ---------------------------------------------------------------------------
+
+def test_oom_seizure_and_release():
+    be = SimBackend(CFG, A100_80G,
+                    tokens_per_step=PROF.tokens_per_step_bd32, seed=0,
+                    kv_pool_pages=64)
+    kv = be.kv
+    assert kv.seize_pages(16) == 16
+    assert kv.free_pages == 48
+    assert kv.seize_pages(1000) == 48       # clamps at the free set
+    assert kv.free_pages == 0
+    assert kv.release_seized() == 64
+    assert kv.free_pages == 64
+
+
+def test_stall_slows_the_replica():
+    """A stalled replica's makespan stretches by the slow factor; the run
+    still completes everything."""
+    base = _build_cluster(None, n=1, router="rr").run(_reqs(4, gap=0.0))
+    plan = FaultPlan.parse("stall@0.0:r0:dur=100:slow=4")
+    slow = _build_cluster(plan, n=1, router="rr").run(_reqs(4, gap=0.0))
+    assert len(slow.metrics) == 4
+    assert slow.makespan > 2.0 * base.makespan
