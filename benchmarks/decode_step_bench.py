@@ -135,14 +135,11 @@ def fused_step_aliasing(model, params, B: int = 2, c: int = 4,
                         attn_impl: str = "ref") -> dict:
     """Compile the fused step standalone and inspect its HLO aliasing."""
     import functools
-    import sys
 
     import jax
     import jax.numpy as jnp
 
-    if REPO_ROOT not in sys.path:
-        sys.path.insert(0, REPO_ROOT)
-    from benchmarks.hlo_analysis import input_output_aliases
+    from repro.analysis.hlo import input_output_aliases
 
     cfg = model.cfg
     W = 8

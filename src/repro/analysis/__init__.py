@@ -1,0 +1,17 @@
+"""Static analysis of the serving stack (``python -m repro.analysis.check``).
+
+Two passes:
+
+* **Pass 1 — compiled-artifact audit** (:mod:`repro.analysis.rules` over
+  the dispatch inventory of :mod:`repro.analysis.inventory`): walks the
+  jaxpr and optimized HLO of every registered serving jit and enforces the
+  invariants the hot path's performance story rests on — pool donation,
+  no vocab-axis HBM escape, O(B·c) host transfer, exact collective volume
+  under shard_map, bounded recompile churn.
+* **Pass 2 — AST repo lint** (:mod:`repro.analysis.lint`): raise-before-
+  mutate in the transactional allocator/backends, no wall clock in DES
+  code, NULL_TRACER discipline, numpy-only host-commit path.
+
+Keep this module import-light: ``check.py`` must be able to set
+``XLA_FLAGS`` before anything pulls in jax.
+"""

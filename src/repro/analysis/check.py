@@ -1,0 +1,128 @@
+"""Serving-invariant static analyzer CLI.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.check [--json FILE] [--only PASS]
+        [--kv-shards 1,2] [--allowlist FILE] [--verbose]
+
+Runs both passes — the compiled-artifact audit over the dispatch inventory
+(Pass 1) and the AST repo lint (Pass 2) — filters findings through the
+allowlist, prints a report, and exits non-zero if any active finding
+remains.  ``--json`` additionally writes the structured findings (active +
+waived) for CI artifact upload.
+
+Must stay the process entry point for jax: XLA_FLAGS is forced to 8 host
+devices *before* jax is imported so the ``kv_shards=2`` inventory can
+build a mesh on CPU runners.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# must precede any jax import (device count locks at first jax init)
+if "--no-devices" not in sys.argv:
+    _fl = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in _fl:
+        os.environ["XLA_FLAGS"] = \
+            (_fl + " --xla_force_host_platform_device_count=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.analysis import lint                        # noqa: E402
+from repro.analysis.findings import (apply_allowlist,  # noqa: E402
+                                     load_allowlist)
+
+DEFAULT_ALLOWLIST = os.path.join(os.path.dirname(__file__), "allowlist.txt")
+
+
+def run_pass1(kv_shards_list, verbose=False) -> list:
+    """Compiled-artifact audit over the dispatch inventory."""
+    import jax
+
+    from repro.analysis import rules
+    from repro.analysis.inventory import audit_registration, build_entries
+
+    findings = list(audit_registration())
+    for shards in kv_shards_list:
+        if shards > len(jax.devices()):
+            print(f"[pass1] skip kv_shards={shards}: only "
+                  f"{len(jax.devices())} devices visible", file=sys.stderr)
+            continue
+        for e in build_entries(shards):
+            args, kwargs = e.make_args(), e.make_kwargs()
+            hlo_text = e.fn.lower(*args, **kwargs).compile().as_text()
+            closed = None
+            if e.vocab_size is not None:
+                traceable = e.traceable or e.fn
+                closed = jax.make_jaxpr(
+                    lambda *a: traceable(*a, **kwargs))(*e.make_args())
+            if verbose:
+                print(f"[pass1] {e.target}", file=sys.stderr)
+            if e.min_aliases is not None:
+                findings += rules.check_pool_donation(
+                    hlo_text, min_aliases=e.min_aliases, target=e.target)
+            if e.vocab_size is not None:
+                findings += rules.check_vocab_escape(
+                    hlo_text, closed, vocab_size=e.vocab_size,
+                    target=e.target)
+            if e.host_budget_bytes is not None:
+                findings += rules.check_host_budget(
+                    hlo_text, budget_bytes=e.host_budget_bytes,
+                    target=e.target)
+            if e.expected_collectives is not None:
+                findings += rules.check_collectives(
+                    hlo_text, expected=e.expected_collectives,
+                    target=e.target)
+            if e.churn is not None:
+                findings += rules.check_recompile_churn(
+                    e.fn, e.churn.arg_makers,
+                    declared_buckets=e.churn.declared_buckets,
+                    target=e.target)
+    return findings
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.check",
+        description="serving-invariant static analyzer (HLO/jaxpr "
+                    "dispatch audit + AST repo lint)")
+    p.add_argument("--json", metavar="FILE", default=None,
+                   help="write structured findings (active + waived)")
+    p.add_argument("--only", choices=["hlo", "lint"], default=None,
+                   help="run a single pass")
+    p.add_argument("--kv-shards", default="1,2",
+                   help="comma list of shard counts to audit (default 1,2)")
+    p.add_argument("--allowlist", default=DEFAULT_ALLOWLIST,
+                   help="per-rule allowlist file")
+    p.add_argument("--no-devices", action="store_true",
+                   help="do not force virtual host devices (sharded "
+                        "entries are skipped if too few devices)")
+    p.add_argument("--verbose", action="store_true")
+    args = p.parse_args(argv)
+
+    findings = []
+    if args.only in (None, "lint"):
+        findings += lint.run_all()
+    if args.only in (None, "hlo"):
+        shards = [int(s) for s in args.kv_shards.split(",") if s]
+        findings += run_pass1(shards, verbose=args.verbose)
+
+    allowlist = load_allowlist(args.allowlist) if args.allowlist else []
+    active, waived = apply_allowlist(findings, allowlist)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"active": [x.to_dict() for x in active],
+                       "waived": [x.to_dict() for x in waived]},
+                      f, indent=1)
+    for x in waived:
+        print(f"  waived {x.rule} {x.target}")
+    for x in active:
+        print(f"FINDING {x.rule} {x.target}\n    {x.message}")
+    print(f"{len(active)} active finding(s), {len(waived)} waived")
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""Mutation fixtures: one deliberately seeded violation per analyzer rule.
+
+``tests/test_analysis.py`` runs each pass over this module (AST rules:
+lint scope override; HLO rules: the toy builders below) and asserts that
+EXACTLY the seeded finding fires, naming the offending op/line — the
+analyzer is itself mutation-tested.  Nothing imports this module at
+runtime and it is excluded from every default lint scope.
+"""
+
+from __future__ import annotations
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+# --- AST101: state write lexically precedes the OutOfPages raise ----------
+
+class BadAllocator:
+    def allocate(self, rid, n):
+        self._tables[rid] = list(range(n))          # mutation first...
+        if n > self.free_pages:
+            raise OutOfPages("too late, table already written")  # AST101
+        return self._tables[rid]
+
+
+# --- AST102: decode state committed before the page reservation -----------
+
+class BadBackend:
+    def decode_step(self, rids, chunk):
+        for rid in rids:
+            self._states[rid].commit(0)             # commit first... AST102
+        self._reserve_step(self.kv, self._states, rids, chunk)
+        return {}
+
+
+# --- AST103: wall clock inside DES code -----------------------------------
+
+import time                                          # noqa: E402
+
+
+def bad_tick_latency():
+    t0 = time.perf_counter()                         # AST103
+    return time.time() - t0                          # AST103
+
+
+# --- AST104: conditional guarding a tracer call ---------------------------
+
+class BadTracerLoop:
+    def tick(self, core, t0, dur):
+        if self.tracer is not None:                  # AST104
+            self.tracer.tick(core, t0, dur, 0, 0)
+
+
+# --- AST105: device ops inside the batched host-commit path ---------------
+
+def bad_batch_apply_step(states, conf, tok):
+    import jax.numpy as jnp                          # AST105
+    return jnp.asarray(conf)                         # AST105
+
+
+# ===========================================================================
+# HLO fixtures — toy dispatches seeding one Pass-1 violation each.
+# Builders import jax lazily; every shape is tiny (compiles in < 1 s).
+# ===========================================================================
+
+FIXTURE_VOCAB = 307        # matches the audit model's distinctive vocab
+FIXTURE_B, FIXTURE_C = 2, 4
+
+
+def undonated_pool_step():
+    """HLO001: a jit that takes and rewrites the page pool WITHOUT
+    donate_argnums — no input_output_alias lands, the pool copies."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(cache, x):
+        return {"k_pages": cache["k_pages"].at[0].add(x),
+                "v_pages": cache["v_pages"].at[0].add(x)}
+
+    cache = {"k_pages": jnp.zeros((4, 8, 2, 4)),
+             "v_pages": jnp.zeros((4, 8, 2, 4))}
+    fn = jax.jit(step)                               # HLO001: no donation
+    return fn, (cache, jnp.ones((8, 2, 4)))
+
+
+def vocab_escaping_step():
+    """HLO002 + HLO003: a fused step that returns the full [B, c, V]
+    logits instead of reducing them on device — the vocab axis escapes to
+    HBM/host and the output bytes blow the 8·B·c budget."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(x, w):
+        return x @ w                                 # [B, c, V] escapes
+
+    fn = jax.jit(step)
+    args = (jnp.zeros((FIXTURE_B, FIXTURE_C, 16)),
+            jnp.zeros((16, FIXTURE_VOCAB)))
+    return fn, args
+
+
+def missing_collective_step():
+    """HLO004: a 'sharded' dispatch whose compiled module contains NO
+    collective although the analytic model declares an all-reduce — the
+    cross-shard merge was silently dropped."""
+    import jax
+    import jax.numpy as jnp
+
+    def step(x):
+        return x * 2.0                               # no psum anywhere
+
+    fn = jax.jit(step)
+    x = jnp.zeros((FIXTURE_B, FIXTURE_C, 4, 18))
+    expected = {"all-reduce": x.nbytes}              # the declared merge
+    return fn, (x,), expected
+
+
+def unbucketed_grid_step():
+    """HLO005: a dispatch fed raw tick batch sizes with no power-of-two
+    bucketing — every batch size compiles its own executable."""
+    import jax
+    import jax.numpy as jnp
+
+    fn = jax.jit(lambda x: x + 1.0)
+    makers = [
+        (lambda b=b: ((jnp.zeros((b, FIXTURE_C), jnp.float32),), {}))
+        for b in (1, 2, 3, 4)]                       # raw, unbucketed
+    return fn, makers

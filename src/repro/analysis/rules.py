@@ -1,0 +1,193 @@
+"""Pass 1 — compiled-artifact rules over the dispatch inventory.
+
+Each rule takes artifacts of one dispatch (optimized HLO text and/or the
+traced jaxpr) plus the entry's declared expectations, and returns
+:class:`~repro.analysis.findings.Finding` records.  Rule IDs are stable:
+
+======  ====================================================================
+HLO001  pool donation — ``input_output_alias`` present for the page-pool
+        args of every jit that takes the pool (kv_shards ∈ {1, 2})
+HLO002  vocab-axis HBM escape — no vocab-sized value survives to the jaxpr
+        or HLO entry outputs (the fused step must reduce ``[B,c,V]`` logits
+        on device, never return or persist them)
+HLO003  host-transfer budget — non-aliased entry-output bytes bounded by
+        the analytic ``host_transfer_bytes`` formula (O(B·c) scalars)
+HLO004  collective audit — the set and per-device byte volume of
+        collectives matches the analytic ``collective_bytes`` model exactly
+HLO005  recompile churn — executing an entry across the tick shape grid
+        compiles only the declared static-argument buckets
+HLO006  inventory registration — every ``jax.jit`` site in the serving
+        modules is registered in :data:`repro.analysis.inventory.KNOWN_JIT_SITES`
+======  ====================================================================
+
+``tests/test_decode_step.py`` / ``tests/test_split_kv.py`` call
+:func:`check_pool_donation` directly instead of re-parsing HLO privately.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+from repro.analysis.hlo import (analyze, input_output_aliases,
+                                nonaliased_output_bytes)
+from repro.analysis.jaxpr import intermediate_avals, out_avals
+
+
+# ---------------------------------------------------------------------------
+# HLO001 — pool donation aliasing
+# ---------------------------------------------------------------------------
+
+def check_pool_donation(hlo_text: str, *, min_aliases: int = 2,
+                        target: str = "dispatch") -> list:
+    """The page pool (k_pages + v_pages) must alias input→output in the
+    compiled module; fewer than ``min_aliases`` alias entries means XLA
+    rejected the donation and every step copies the pool."""
+    aliases = input_output_aliases(hlo_text)
+    if len(aliases) >= min_aliases:
+        return []
+    return [Finding(
+        "HLO001", target,
+        f"expected >= {min_aliases} input_output_alias entries for the "
+        f"page pool, compiled module has {len(aliases)} "
+        f"({[a['param_number'] for a in aliases]}) — donation did not "
+        f"land, each step materializes a pool copy")]
+
+
+# ---------------------------------------------------------------------------
+# HLO002 — no vocab-axis escape
+# ---------------------------------------------------------------------------
+
+def _vocab_shaped(dims, vocab_size: int) -> bool:
+    return vocab_size in tuple(dims)
+
+
+def check_vocab_escape(hlo_text: str, closed_jaxpr, *, vocab_size: int,
+                       target: str = "dispatch") -> list:
+    """No value with a vocab-sized axis may outlive the dispatch: not in
+    the jaxpr outvars (trace-level contract) and not in the HLO entry
+    outputs (what actually crosses the device boundary).  Vocab-sized
+    *intermediates* inside the fused step are fine — XLA keeps them in the
+    fusion — but a live-out ``[B,c,V]`` is an O(V) HBM/PCIe regression."""
+    out = []
+    if closed_jaxpr is not None:
+        for i, aval in enumerate(out_avals(closed_jaxpr)):
+            shape = tuple(getattr(aval, "shape", ()))
+            if _vocab_shaped(shape, vocab_size):
+                out.append(Finding(
+                    "HLO002", target,
+                    f"jaxpr output {i} has vocab-sized shape {shape} "
+                    f"(V={vocab_size}) — logits escape the fused step"))
+    if hlo_text:
+        fresh = nonaliased_output_bytes(hlo_text)["fresh_shapes"]
+        for idx, dt, dims, nbytes in fresh:
+            if _vocab_shaped(dims, vocab_size):
+                out.append(Finding(
+                    "HLO002", target,
+                    f"HLO entry output #{idx} is {dt}{list(dims)} "
+                    f"({nbytes} B) with a vocab-sized axis (V={vocab_size})"
+                    f" — [B,V] crosses the host boundary"))
+    return out
+
+
+def census_vocab_intermediates(closed_jaxpr, *, vocab_size: int) -> list:
+    """Informational: traced intermediates carrying a vocab axis (allowed —
+    they live inside the fused step — but reported by ``--verbose``)."""
+    return [tuple(a.shape) for a in intermediate_avals(closed_jaxpr)
+            if _vocab_shaped(tuple(getattr(a, "shape", ())), vocab_size)]
+
+
+# ---------------------------------------------------------------------------
+# HLO003 — host-transfer budget
+# ---------------------------------------------------------------------------
+
+def check_host_budget(hlo_text: str, *, budget_bytes: int,
+                      target: str = "dispatch") -> list:
+    """Non-aliased entry outputs are the only buffers a host fetch can
+    move; their byte total must not exceed the analytic per-dispatch
+    ``host_transfer_bytes`` formula (conf fp32 + tok int32 = 8 B per
+    window slot for the fused decode step)."""
+    acct = nonaliased_output_bytes(hlo_text)
+    if acct["fresh"] <= budget_bytes:
+        return []
+    shapes = ", ".join(f"#{i}:{dt}{list(d)}={b}B"
+                       for i, dt, d, b in acct["fresh_shapes"])
+    return [Finding(
+        "HLO003", target,
+        f"non-aliased output bytes {acct['fresh']} exceed the analytic "
+        f"host-transfer budget {budget_bytes} (fresh outputs: {shapes})")]
+
+
+# ---------------------------------------------------------------------------
+# HLO004 — collective audit
+# ---------------------------------------------------------------------------
+
+def check_collectives(hlo_text: str, *, expected: dict,
+                      target: str = "dispatch",
+                      tolerance: float = 0.0) -> list:
+    """The compiled module's collectives must match the analytic model
+    exactly: same kinds, same per-device operand-byte volume.  ``expected``
+    maps kind → bytes (e.g. ``{"all-reduce": N}``); an empty dict asserts
+    the module contains no collectives at all."""
+    stats = analyze(hlo_text)["collectives"]
+    actual = {k: v["bytes"] for k, v in stats.items() if v["count"] > 0}
+    out = []
+    for kind in sorted(set(actual) - set(expected)):
+        out.append(Finding(
+            "HLO004", target,
+            f"unexpected collective {kind}: {actual[kind]:.0f} B "
+            f"({stats[kind]['count']:.0f} ops) — analytic model declares "
+            f"none"))
+    for kind in sorted(set(expected) - set(actual)):
+        out.append(Finding(
+            "HLO004", target,
+            f"missing collective {kind}: analytic model expects "
+            f"{expected[kind]:.0f} B, compiled module has none"))
+    for kind in sorted(set(expected) & set(actual)):
+        want, got = float(expected[kind]), float(actual[kind])
+        if abs(got - want) > tolerance * max(want, 1.0):
+            out.append(Finding(
+                "HLO004", target,
+                f"{kind} volume mismatch: compiled {got:.0f} B vs "
+                f"analytic {want:.0f} B "
+                f"({stats[kind]['count']:.0f} ops)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# HLO005 — recompile churn
+# ---------------------------------------------------------------------------
+
+def _jit_cache_size(fn) -> int | None:
+    for attr in ("_cache_size",):
+        f = getattr(fn, attr, None)
+        if callable(f):
+            return int(f())
+    return None
+
+
+def check_recompile_churn(fn, arg_makers, *, declared_buckets: int,
+                          target: str = "dispatch") -> list:
+    """Execute ``fn`` across the tick shape grid (each ``arg_makers[i]()``
+    returns ``(args, kwargs)`` for one raw tick shape, already routed
+    through the backend's bucketing); the jit cache must end up with at
+    most ``declared_buckets`` traces.  More means a shape dim leaks into
+    the trace signature and production ticks retrace per batch size."""
+    if hasattr(fn, "clear_cache"):
+        fn.clear_cache()
+    shapes_run = []
+    for make in arg_makers:
+        args, kwargs = make()
+        shapes_run.append(tuple(getattr(a, "shape", None) for a in args))
+        fn(*args, **kwargs)
+    size = _jit_cache_size(fn)
+    if size is None:
+        return [Finding(
+            "HLO005", target,
+            "cannot read the jit compilation cache size on this jax "
+            "version — churn rule needs fn._cache_size()")]
+    if size <= declared_buckets:
+        return []
+    return [Finding(
+        "HLO005", target,
+        f"{len(arg_makers)} grid shapes compiled {size} distinct "
+        f"executables, declared bucket count is {declared_buckets} — "
+        f"static-argument bucketing is leaking (grid: {shapes_run})")]

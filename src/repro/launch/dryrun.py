@@ -27,9 +27,7 @@ from repro.distributed.sharding import use_rules               # noqa: E402
 from repro.launch.mesh import make_production_mesh             # noqa: E402
 from repro.launch.specs import build_cell                      # noqa: E402
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__),
-                                "..", "..", ".."))
-from benchmarks.hlo_analysis import analyze as hlo_analyze     # noqa: E402
+from repro.analysis.hlo import analyze as hlo_analyze          # noqa: E402
 
 
 def model_flops(arch: str, shape: str, meta: dict) -> float:

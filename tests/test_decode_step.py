@@ -192,12 +192,7 @@ def test_fused_step_hlo_aliases_page_pool(model_and_params):
     """The compiled fused step must alias the page-pool inputs onto its
     outputs (XLA updates the pool in place) — otherwise every decode step
     materializes a full copy of the KV pool."""
-    import os
-    import sys
-    repo = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-    if repo not in sys.path:
-        sys.path.insert(0, repo)
-    from benchmarks.hlo_analysis import input_output_aliases
+    from repro.analysis.rules import check_pool_donation
 
     model, params = model_and_params
     be = ModelBackend(model, params, max_len=64, attn_impl="ref")
@@ -208,9 +203,10 @@ def test_fused_step_hlo_aliases_page_pool(model_and_params):
         jnp.zeros(B, jnp.int32), jnp.zeros(B, jnp.int32),
         jnp.zeros((B, W), jnp.int32), jnp.zeros(B, jnp.int32),
         jnp.zeros(B, jnp.int32))
-    aliases = input_output_aliases(lowered.compile().as_text())
-    # both pool buffers (k_pages, v_pages) alias through
-    assert len(aliases) >= 2
+    # both pool buffers (k_pages, v_pages) alias through: the shared
+    # HLO001 rule returns no findings
+    txt = lowered.compile().as_text()
+    assert check_pool_donation(txt, target="decode_step_paged") == []
     pool_bytes = cache["k_pages"].nbytes
     # sanity: aliasing parsed from a module that actually owns the pool
     assert pool_bytes > 0
@@ -219,7 +215,8 @@ def test_fused_step_hlo_aliases_page_pool(model_and_params):
     lowered = be._prefill_paged.lower(
         params, be._pages_cache(), toks, jnp.zeros(B, jnp.int32),
         jnp.zeros((B, W), jnp.int32))
-    assert len(input_output_aliases(lowered.compile().as_text())) >= 2
+    txt = lowered.compile().as_text()
+    assert check_pool_donation(txt, target="prefill_paged") == []
 
 
 def test_no_use_after_donate_on_retained_pages_reference(model_and_params):

@@ -320,7 +320,7 @@ def test_cow_and_swap_dispatches_keep_donation():
     import jax
     import jax.numpy as jnp
 
-    from benchmarks.hlo_analysis import input_output_aliases
+    from repro.analysis.hlo import input_output_aliases
     from repro.models.transformer import copy_pages, write_pages
 
     cache = {"k_pages": jnp.zeros((2, 8, 4, 2, 4)),

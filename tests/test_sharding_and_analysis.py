@@ -57,8 +57,7 @@ def test_overrides():
 # ---------------------------------------------------------------------------
 
 def test_hlo_analyzer_trip_counts():
-    sys.path.insert(0, REPO)
-    from benchmarks.hlo_analysis import analyze
+    from repro.analysis.hlo import analyze
     import jax
     import jax.numpy as jnp
 
